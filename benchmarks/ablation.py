@@ -1,0 +1,35 @@
+"""Paper Table 1: impact of each selection-cost strategy on speed.
+
+Disable one cost term (or the hoisting 'graph optimization') at a time,
+recompile at the same memory budget, and report wall-time relative to the
+full strategy."""
+from __future__ import annotations
+
+from repro.core import build_autochunk
+from repro.core.selection import CostHyper
+
+from .common import gpt_block_model, time_fn
+
+
+def run(csv_rows, seq=1536, budget=0.12):
+    cfg, params, batch, fwd = gpt_block_model(seq, n_layers=3)
+    variants = {
+        "all_strategies": dict(hyper=CostHyper()),
+        "no_density": dict(hyper=CostHyper(use_density=False)),
+        "no_stride": dict(hyper=CostHyper(use_stride=False)),
+        "no_nodes": dict(hyper=CostHyper(use_nodes=False)),
+        "no_flops": dict(hyper=CostHyper(use_flops=False)),
+        "no_graph_opt": dict(hyper=CostHyper(), allow_hoist=False),
+    }
+    t_ref = None
+    for name, kw in variants.items():
+        res = build_autochunk(fwd, (params, batch), budget_ratio=budget, **kw)
+        t = time_fn(res.fn, params, batch)
+        if t_ref is None:
+            t_ref = t
+        csv_rows.append(
+            (f"table1_{name}", t,
+             f"speed={100*t_ref/t:.1f}%;peak_MiB={res.final_peak/2**20:.2f};"
+             f"stages={len(res.plan)}")
+        )
+    return csv_rows

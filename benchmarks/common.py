@@ -1,0 +1,83 @@
+"""Shared benchmark helpers: timing, memory estimation, model builders."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import build_autochunk, estimate_memory, trace
+from repro.models import model as M
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-time (us) of a jitted callable."""
+    jfn = jax.jit(fn)
+    for _ in range(warmup):
+        jax.block_until_ready(jfn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jfn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def peak_activation(fn, args, weight_argnums=(0,)) -> int:
+    g, _ = trace(fn, args, weight_argnums=weight_argnums)
+    return estimate_memory(g).peak_bytes
+
+
+def gpt_block_model(seq: int, *, n_layers: int = 2, d: int = 128, batch: int = 1):
+    """The paper's GPT (prefill) evaluation model at CPU scale."""
+    cfg = get_config("gpt-paper").reduced().with_(
+        dtype="float32", n_layers=n_layers, d_model=d, n_heads=4,
+        n_kv_heads=4, d_ff=4 * d, scan_layers=False,
+    )
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch_d = {"tokens": jnp.ones((batch, seq), jnp.int32)}
+
+    def fwd(params, batch):
+        return M.forward(cfg, params, batch)[0]
+
+    return cfg, params, batch_d, fwd
+
+
+def encoder_model(seq: int, *, n_layers: int = 2, d: int = 128, batch: int = 1):
+    """ViT-analogue: bidirectional encoder (hubert backbone family)."""
+    cfg = get_config("hubert-xlarge").reduced().with_(
+        dtype="float32", n_layers=n_layers, d_model=d, n_heads=4, n_kv_heads=4,
+        d_ff=4 * d, scan_layers=False,
+    )
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch_d = {"frames": jax.random.normal(jax.random.PRNGKey(1), (batch, seq, d))}
+
+    def fwd(params, batch):
+        return M.forward(cfg, params, batch)[0]
+
+    return cfg, params, batch_d, fwd
+
+
+def vlm_model(seq: int, *, batch: int = 1):
+    """Multimodal analogue (internvl2 backbone, stub patches)."""
+    cfg = get_config("internvl2-1b").reduced().with_(
+        dtype="float32", scan_layers=False, n_layers=2
+    )
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch_d = {
+        "tokens": jnp.ones((batch, seq), jnp.int32),
+        "patches": jax.random.normal(
+            jax.random.PRNGKey(2), (batch, cfg.n_frontend_tokens, cfg.d_model)
+        ),
+    }
+
+    def fwd(params, batch):
+        return M.forward(cfg, params, batch)[0]
+
+    return cfg, params, batch_d, fwd
+
+
+MODELS = {"gpt": gpt_block_model, "encoder": encoder_model, "vlm": vlm_model}

@@ -1,0 +1,63 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper figure/table.
+
+  fig1   max_seq.py               activation growth + max-seq extension
+  fig5   throughput_vs_budget.py  throughput @ 50/40/20% activation budgets
+  fig6   vs_fused_kernel.py       AutoChunk on top of fused attention
+  fig7/8 vs_expert_chunk.py       vs expert-designed (OpenFold-style) chunk
+  table1 ablation.py              selection-strategy ablation
+  roofline roofline.py            dry-run roofline terms (deliverable g)
+
+Run all: PYTHONPATH=src python -m benchmarks.run [--only fig5,table1]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (
+    ablation,
+    arch_coverage,
+    max_seq,
+    roofline,
+    throughput_vs_budget,
+    vs_expert_chunk,
+    vs_fused_kernel,
+)
+
+SUITES = {
+    "fig1": max_seq.run,
+    "fig5": throughput_vs_budget.run,
+    "fig6": vs_fused_kernel.run,
+    "fig7": vs_expert_chunk.run,
+    "table1": ablation.run,
+    "archcov": arch_coverage.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma-separated subset of " + ",".join(SUITES))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SUITES)
+
+    rows = []
+    for name in names:
+        t0 = time.time()
+        try:
+            SUITES[name](rows)
+            print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:
+            traceback.print_exc()
+            rows.append((f"{name}_FAILED", 0.0, "exception"))
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Paper Fig. 7/8: AutoChunk vs expert-designed chunk.
+
+Expert baseline: fixed chunk_size=64 module-wholesale chunking (the
+OpenFold configuration the paper compares against).  We compare (a) the
+minimum achievable activation memory and (b) wall-time at matched memory.
+Paper claims: 30.6–34.4% lower minimum memory, 9.2–14.6% faster at equal
+memory."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_autochunk
+from repro.core.expert_chunk import expert_chunk_block
+
+from .common import gpt_block_model, peak_activation, time_fn
+
+
+def run(csv_rows, seq=1024):
+    cfg, params, batch, fwd = gpt_block_model(seq)
+
+    # --- expert-designed: chunk every block wholesale at size 64 ----------
+    from repro.models.model import dense_block_full
+    from repro.models import layers as L
+    from repro.models.model import embed_inputs
+
+    def expert_fwd(params, batch):
+        h, _ = embed_inputs(cfg, params, batch)
+        for p in params["blocks"]:
+            blk = expert_chunk_block(
+                lambda pp, xx: dense_block_full(cfg, pp, xx), chunk_size=64
+            )
+            h = blk(p, h)
+        h = L.apply_norm(cfg, h, params["final_norm"])
+        return L.unembed(cfg, params["embed"], h)
+
+    # Expert style (OpenFold): chunk the attention over the query dim and
+    # the FFN over the sequence dim, both with the fixed chunk_size=64 the
+    # paper cites as the effective expert configuration.
+    from repro.core.expert_chunk import expert_chunk_attention
+
+    def expert_fwd_safe(params, batch):
+        h, positions = embed_inputs(cfg, params, batch)
+        for p in params["blocks"]:
+            hn = L.apply_norm(cfg, h, p["ln1"])
+            q, k, v = L.attn_project_qkv(cfg, p["attn"], hn, positions)
+            o = expert_chunk_attention(q, k, v, chunk_size=64, causal=True)
+            h = h + o.reshape(h.shape[0], h.shape[1], -1) @ p["attn"]["wo"]
+            ffn = expert_chunk_block(
+                lambda pp, xx: L.mlp(cfg, pp["mlp"], L.apply_norm(cfg, xx, pp["ln2"])),
+                chunk_size=64,
+            )
+            h = h + ffn(p, h)
+        h = L.apply_norm(cfg, h, params["final_norm"])
+        return L.unembed(cfg, params["embed"], h)
+
+    ref = fwd(params, batch)
+    got = expert_fwd_safe(params, batch)
+    import numpy as np
+
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-3)
+
+    peak_expert = peak_activation(expert_fwd_safe, (params, batch))
+    t_expert = time_fn(expert_fwd_safe, params, batch)
+    csv_rows.append(
+        ("fig7_expert_chunk64", t_expert, f"min_peak_MiB={peak_expert/2**20:.2f}")
+    )
+
+    # --- AutoChunk: minimum memory (tiny budget), and matched-memory speed --
+    res_min = build_autochunk(fwd, (params, batch), budget_ratio=0.02)
+    csv_rows.append(
+        ("fig7_autochunk_min", 0.0,
+         f"min_peak_MiB={res_min.final_peak/2**20:.2f};"
+         f"vs_expert={100*(1-res_min.final_peak/peak_expert):.1f}%_lower")
+    )
+    res_eq = build_autochunk(fwd, (params, batch), budget_bytes=peak_expert)
+    t_auto = time_fn(res_eq.fn, params, batch)
+    csv_rows.append(
+        ("fig8_autochunk_matched_mem", t_auto,
+         f"peak_MiB={res_eq.final_peak/2**20:.2f};"
+         f"speedup_vs_expert={100*(t_expert/t_auto-1):.1f}%")
+    )
+    return csv_rows

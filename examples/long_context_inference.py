@@ -1,0 +1,48 @@
+"""The paper's core scenario: long-sequence prefill under a memory budget.
+
+Sweeps sequence length on a GPT stack, reporting baseline vs AutoChunk'd
+peak activation memory and the max sequence that fits a fixed budget
+(Fig. 1 / §4.2 'breaking the memory wall').
+
+  PYTHONPATH=src python examples/long_context_inference.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import build_autochunk
+from repro.models import model as M
+
+
+def main():
+    cfg = get_config("gpt-paper").reduced().with_(
+        dtype="float32", n_layers=2, scan_layers=False
+    )
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    def fwd(params, batch):
+        return M.forward(cfg, params, batch)[0]
+
+    print(f"{'seq':>6} {'baseline MiB':>13} {'autochunk MiB':>14} {'reduction':>10}")
+    budget = None
+    for s in (256, 512, 1024, 2048, 4096):
+        batch = {"tokens": jnp.ones((1, s), jnp.int32)}
+        res = build_autochunk(fwd, (params, batch), budget_ratio=0.2, max_stages=16)
+        if budget is None:
+            budget = res.baseline_peak  # "the memory wall": peak at seq 256
+        print(f"{s:>6} {res.baseline_peak/2**20:>13.2f}"
+              f" {res.final_peak/2**20:>14.2f}"
+              f" {res.reduction*100:>9.1f}%")
+    print(f"\nfixed budget = baseline@256 = {budget/2**20:.2f} MiB")
+    for s in (512, 1024, 2048, 4096):
+        batch = {"tokens": jnp.ones((1, s), jnp.int32)}
+        res = build_autochunk(fwd, (params, batch), budget_bytes=budget, max_stages=16)
+        fits = res.final_peak <= budget * 1.02
+        print(f"  seq {s}: chunked peak {res.final_peak/2**20:.2f} MiB"
+              f" -> {'FITS' if fits else 'exceeds budget'}")
+        if not fits:
+            break
+
+
+if __name__ == "__main__":
+    main()

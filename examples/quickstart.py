@@ -1,0 +1,42 @@
+"""Quickstart: the paper's one-liner — ``model = autochunk(model, budget)``.
+
+Builds a GPT block stack, compiles it through AutoChunk at a 20% activation
+budget, prints the compilation report, and verifies outputs are unchanged.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import autochunk
+from repro.models import model as M
+
+
+def main():
+    cfg = get_config("gpt-paper").reduced().with_(
+        dtype="float32", n_layers=2, scan_layers=False
+    )
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.ones((1, 1024), jnp.int32)}
+
+    def model(params, batch):
+        return M.forward(cfg, params, batch)[0]
+
+    # --- the paper's API ---------------------------------------------------
+    chunked = autochunk(model, (params, batch), memory_budget=0.2)
+    # ------------------------------------------------------------------------
+
+    print(chunked.autochunk_result.report())
+    y0 = model(params, batch)
+    y1 = jax.jit(chunked)(params, batch)
+    err = float(jnp.abs(y0 - y1).max())
+    print(f"\noutput max |delta| vs baseline: {err:.2e}")
+    assert np.allclose(np.asarray(y0), np.asarray(y1), atol=2e-4)
+    print("outputs identical — activation peak reduced "
+          f"{chunked.autochunk_result.reduction*100:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

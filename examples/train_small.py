@@ -1,0 +1,48 @@
+"""Training example: a small dense LM for a few hundred steps on CPU with
+the full substrate (synthetic pipeline -> remat'd train step -> AdamW ->
+checkpointing), optionally with AutoChunk compiled into the blocks.
+
+  PYTHONPATH=src python examples/train_small.py [--steps 200] [--autochunk 0.4]
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.data import synthetic_stream
+from repro.models import model as M
+from repro.training import run_train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--autochunk", type=float, default=None)
+    ap.add_argument("--checkpoint", type=str, default="/tmp/repro_ckpt.npz")
+    args = ap.parse_args()
+
+    cfg = get_config("minitron-4b").reduced().with_(
+        dtype="float32", n_layers=2, d_model=256, n_heads=4, n_kv_heads=2,
+        d_ff=512, vocab_size=2048,
+    )
+    if args.autochunk:
+        cfg = cfg.with_(autochunk_budget=args.autochunk)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {cfg.name}-family reduced, {n/1e6:.1f}M params"
+          f"{', autochunk@'+str(args.autochunk) if args.autochunk else ''}")
+
+    data = synthetic_stream(cfg, batch=8, seq_len=128, seed=0)
+    params, _, hist = run_train(
+        cfg, params, data, steps=args.steps, base_lr=1e-3,
+        log_every=max(args.steps // 10, 1),
+        checkpoint_path=args.checkpoint,
+    )
+    drop = hist[0]["loss"] - hist[-1]["loss"]
+    print(f"loss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} (-{drop:.3f});"
+          f" checkpoint saved to {args.checkpoint}")
+    assert drop > 0.3, "training failed to reduce loss"
+
+
+if __name__ == "__main__":
+    main()

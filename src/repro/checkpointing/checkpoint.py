@@ -1,0 +1,58 @@
+"""Pytree checkpointing to .npz (flat key paths, dtype-preserving).
+
+Deliberately dependency-free (no orbax offline); good enough for the
+single-host training examples and round-trip tested.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, tree, *, step: int = 0, extra: Dict | None = None):
+    os.makedirs(os.path.dirname(os.path.abspath(path)) or ".", exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    meta = {"step": step, "extra": extra or {}, "keys": sorted(flat)}
+    np.savez(path, __meta__=json.dumps(meta), **flat)
+
+
+def load_checkpoint(path: str, tree_like) -> Tuple[Any, int]:
+    """Restore into the structure of ``tree_like``.  Returns (tree, step)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path, allow_pickle=False)
+    meta = json.loads(str(data["__meta__"]))
+    flat_ref = _flatten_with_paths(tree_like)
+    restored = {}
+    for key, ref in flat_ref.items():
+        if key not in data:
+            raise KeyError(f"checkpoint missing key {key}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {ref.shape}")
+        restored[key] = jax.numpy.asarray(arr).astype(ref.dtype)
+    leaves, treedef = jax.tree_util.tree_flatten(tree_like)
+    paths = [
+        "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        for path, _ in jax.tree_util.tree_flatten_with_path(tree_like)[0]
+    ]
+    new_leaves = [restored[p] for p in paths]
+    return treedef.unflatten(new_leaves), int(meta["step"])

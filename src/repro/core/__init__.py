@@ -1,0 +1,28 @@
+"""AutoChunk core: the paper's compiler passes as composable JAX transforms."""
+from .api import AutoChunkResult, StageRecord, autochunk, build_autochunk
+from .codegen import build_chunked_fn, graph_to_fn
+from .estimation import MemoryProfile, estimate_memory
+from .graph import Graph, dim_stride, eqn_flops, graph_flops, trace
+from .search import ChunkCandidate, search_chunks
+from .selection import CostHyper, chunk_cost, rank_candidates
+
+__all__ = [
+    "AutoChunkResult",
+    "StageRecord",
+    "autochunk",
+    "build_autochunk",
+    "build_chunked_fn",
+    "graph_to_fn",
+    "MemoryProfile",
+    "estimate_memory",
+    "Graph",
+    "trace",
+    "eqn_flops",
+    "graph_flops",
+    "dim_stride",
+    "ChunkCandidate",
+    "search_chunks",
+    "CostHyper",
+    "chunk_cost",
+    "rank_candidates",
+]

@@ -1,0 +1,264 @@
+"""Public AutoChunk API: ``autochunk(fn, example_args, memory budget) -> fn``.
+
+Mirrors the paper's ``model = autochunk(model, memory_budget)`` entry point.
+The driver runs the compiler stages (estimate -> search -> select -> codegen)
+until the peak intermediate-activation memory fits the budget, verifying
+every applied stage with a true re-trace + re-estimation rather than
+trusting the analytic model (jaxprs make this cheap and exact).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+from jax import tree_util
+
+from .codegen import build_chunked_fn
+from .estimation import MemoryProfile, estimate_memory
+from .graph import Graph, trace
+from .search import search_chunks
+from .selection import CostHyper, rank_candidates
+
+
+@dataclass
+class StageRecord:
+    stage: int
+    region: Tuple[int, int]
+    n_chunks: int
+    chunk_extent: int
+    n_loop_eqns: int
+    n_hoisted: int
+    cost: float
+    peak_before: int
+    peak_after: int
+
+
+@dataclass
+class AutoChunkResult:
+    """A chunked callable plus the full compilation report."""
+
+    fn: Callable                      # original signature
+    flat_fn: Callable                 # flat leaves -> flat leaves
+    plan: List[StageRecord]
+    baseline_peak: int
+    final_peak: int
+    budget_bytes: int
+    io_bytes: int
+    weight_bytes: int
+    elapsed_s: float = 0.0
+
+    @property
+    def reduction(self) -> float:
+        if self.baseline_peak == 0:
+            return 0.0
+        return 1.0 - self.final_peak / self.baseline_peak
+
+    def report(self) -> str:
+        lines = [
+            "AutoChunk plan:",
+            f"  baseline peak activation: {self.baseline_peak/2**20:.2f} MiB",
+            f"  budget:                   {self.budget_bytes/2**20:.2f} MiB",
+            f"  final peak activation:    {self.final_peak/2**20:.2f} MiB"
+            f"  ({self.reduction*100:.1f}% reduction)",
+            f"  io bytes: {self.io_bytes/2**20:.2f} MiB,"
+            f" weights: {self.weight_bytes/2**20:.2f} MiB",
+            f"  compile time: {self.elapsed_s:.2f}s, stages: {len(self.plan)}",
+        ]
+        for r in self.plan:
+            lines.append(
+                f"    stage {r.stage}: region [{r.region[0]},{r.region[1]}]"
+                f" n={r.n_chunks} (extent {r.chunk_extent})"
+                f" loop_eqns={r.n_loop_eqns} hoisted={r.n_hoisted}"
+                f" peak {r.peak_before/2**20:.1f} -> {r.peak_after/2**20:.1f} MiB"
+                f" cost={r.cost:.3f}"
+            )
+        return "\n".join(lines)
+
+
+def _progress_metric(prof: MemoryProfile):
+    """Lexicographic progress: peak, #equations at >=99% of peak, then the
+    mass of the top-8 live sets.  Repeated layer stacks tie on raw peak, so
+    a stage that flattens one of several equal peaks must still count as
+    progress (the next stage attacks the remaining ones)."""
+    peak = prof.peak_bytes
+    near = sum(1 for b in prof.per_eqn_bytes if b >= 0.99 * peak)
+    top = sum(sorted(prof.per_eqn_bytes)[-8:])
+    return (peak, near, top)
+
+
+def _flatten_spec(example_args: Sequence[Any], weight_argnums: Sequence[int]):
+    flat, in_tree = tree_util.tree_flatten(tuple(example_args))
+    counts = [len(tree_util.tree_leaves(a)) for a in example_args]
+    weight_flat: List[int] = []
+    pos = 0
+    for i, c in enumerate(counts):
+        if i in weight_argnums:
+            weight_flat.extend(range(pos, pos + c))
+        pos += c
+    return flat, in_tree, weight_flat
+
+
+def build_autochunk(
+    fn: Callable,
+    example_args: Sequence[Any],
+    *,
+    budget_ratio: Optional[float] = None,
+    budget_bytes: Optional[int] = None,
+    weight_argnums: Sequence[int] = (0,),
+    hyper: Optional[CostHyper] = None,
+    max_stages: int = 12,
+    beam: int = 4,
+    window: int = 48,
+    min_gain: float = 0.02,
+    allow_hoist: bool = True,
+    dim_blocklist: Sequence[int] = (),
+    anneal: int = 2,
+    verbose: bool = False,
+) -> AutoChunkResult:
+    """Run the full AutoChunk pipeline on ``fn``.
+
+    ``example_args`` may be (pytrees of) arrays or ShapeDtypeStructs; nothing
+    is materialized.  ``budget_ratio`` is relative to the baseline peak
+    intermediate-activation memory (the paper's 0.2/0.4/0.5 settings);
+    ``budget_bytes`` is absolute.  Exactly one must be given.
+    """
+    if (budget_ratio is None) == (budget_bytes is None):
+        raise ValueError("give exactly one of budget_ratio / budget_bytes")
+    hyper = hyper or CostHyper()
+    t0 = time.time()
+
+    flat_args, in_tree, weight_flat = _flatten_spec(example_args, weight_argnums)
+    out_tree_box: List[Any] = [None]
+
+    def flat_fn(*leaves):
+        args = tree_util.tree_unflatten(in_tree, leaves)
+        out = fn(*args)
+        out_leaves, out_tree = tree_util.tree_flatten(out)
+        out_tree_box[0] = out_tree
+        return tuple(out_leaves)
+
+    cur: Callable = flat_fn
+    plan: List[StageRecord] = []
+    g, _ = trace(cur, flat_args, weight_argnums=weight_flat)
+    prof = estimate_memory(g)
+    baseline_peak = prof.peak_bytes
+    if budget_bytes is None:
+        budget_bytes = int(baseline_peak * budget_ratio)
+
+    for stage in range(max_stages):
+        if prof.peak_bytes <= budget_bytes:
+            break
+        cands = search_chunks(
+            g, prof, window=window, allow_hoist=allow_hoist,
+            dim_blocklist=frozenset(dim_blocklist),
+        )
+        ranked = rank_candidates(g, prof, cands, budget_bytes, hyper)
+        if verbose:
+            print(
+                f"[autochunk] stage {stage}: peak={prof.peak_bytes/2**20:.1f}MiB"
+                f" budget={budget_bytes/2**20:.1f}MiB candidates={len(ranked)}"
+            )
+        applied = None
+        # DP-with-beam: verify the top-`beam` candidates by true re-trace and
+        # keep the best (meets-budget, lowest cost, lowest verified peak).
+        best_key = None
+        cur_metric = _progress_metric(prof)
+        for cand, n, est, cost in ranked[:beam]:
+            try:
+                new_fn = build_chunked_fn(g, cand, n)
+                g2, _ = trace(new_fn, flat_args, weight_argnums=weight_flat)
+                prof2 = estimate_memory(g2)
+            except Exception:
+                continue
+            big_gain = prof2.peak_bytes < prof.peak_bytes * (1.0 - min_gain)
+            if not big_gain and _progress_metric(prof2) >= cur_metric:
+                continue  # no peak gain and no structural progress
+            over = prof2.peak_bytes > budget_bytes
+            key = (
+                (over, cost, prof2.peak_bytes)
+                if not over
+                else (over,) + _progress_metric(prof2) + (cost,)
+            )
+            if best_key is None or key < best_key:
+                best_key = key
+                applied = (cand, n, cost, new_fn, g2, prof2)
+        if applied is None:
+            break
+        cand, n, cost, new_fn, g2, prof2 = applied
+        plan.append(
+            StageRecord(
+                stage=stage,
+                region=(cand.s, cand.e),
+                n_chunks=n,
+                chunk_extent=cand.chunk_extent,
+                n_loop_eqns=len(cand.in_loop),
+                n_hoisted=len(cand.hoisted),
+                cost=cost,
+                peak_before=prof.peak_bytes,
+                peak_after=prof2.peak_bytes,
+            )
+        )
+        cur, g, prof = new_fn, g2, prof2
+
+    # Budget annealing: the analytic per-stage estimate is optimistic for
+    # loose budgets (region boundaries that "meet" analytically can verify
+    # over).  When the target is missed, retry the whole pipeline against a
+    # tighter internal budget and keep whichever plan verifies lower.
+    if prof.peak_bytes > budget_bytes and anneal > 0 and plan:
+        retry = build_autochunk(
+            fn, example_args,
+            budget_bytes=max(budget_bytes // 2, 1),
+            weight_argnums=weight_argnums, hyper=hyper,
+            max_stages=max_stages, beam=beam, window=window,
+            min_gain=min_gain, allow_hoist=allow_hoist,
+            dim_blocklist=dim_blocklist, anneal=anneal - 1, verbose=verbose,
+        )
+        if retry.final_peak < prof.peak_bytes:
+            return AutoChunkResult(
+                fn=retry.fn, flat_fn=retry.flat_fn, plan=retry.plan,
+                baseline_peak=baseline_peak, final_peak=retry.final_peak,
+                budget_bytes=budget_bytes, io_bytes=retry.io_bytes,
+                weight_bytes=retry.weight_bytes,
+                elapsed_s=time.time() - t0,
+            )
+
+    final_flat = cur
+
+    def wrapped(*args):
+        leaves, tree = tree_util.tree_flatten(tuple(args))
+        out_leaves = final_flat(*leaves)
+        return tree_util.tree_unflatten(out_tree_box[0], list(out_leaves))
+
+    return AutoChunkResult(
+        fn=wrapped,
+        flat_fn=final_flat,
+        plan=plan,
+        baseline_peak=baseline_peak,
+        final_peak=prof.peak_bytes,
+        budget_bytes=budget_bytes,
+        io_bytes=prof.io_bytes,
+        weight_bytes=prof.weight_bytes,
+        elapsed_s=time.time() - t0,
+    )
+
+
+def autochunk(
+    fn: Callable,
+    example_args: Sequence[Any],
+    memory_budget: float = 0.5,
+    **kwargs,
+) -> Callable:
+    """Paper-style convenience wrapper.
+
+    ``memory_budget`` <= 1.0 is a ratio of the baseline activation peak;
+    > 1.0 is absolute bytes.  The returned callable carries the full
+    compilation report on ``.autochunk_result``.
+    """
+    if memory_budget <= 1.0:
+        res = build_autochunk(fn, example_args, budget_ratio=memory_budget, **kwargs)
+    else:
+        res = build_autochunk(fn, example_args, budget_bytes=int(memory_budget), **kwargs)
+    res.fn.autochunk_result = res  # type: ignore[attr-defined]
+    return res.fn

@@ -1,0 +1,140 @@
+"""Estimation pass: liveness-based activation-memory analysis of a Graph.
+
+This is AutoChunk's first compiler pass.  Because jaxprs are pure SSA (no
+aliasing, no in-place mutation) the liveness analysis is exact: a produced
+value is live from its defining equation until its last use.  The pass
+reports, per equation, how many bytes of *intermediate activation* are live
+while that equation executes, the overall peak, and where the peak sits —
+the ``peak node`` that seeds the chunk search.
+
+Loop primitives (``scan`` / ``while``) are handled recursively: their live
+memory is carry + per-iteration slice + the body's own internal peak.  That
+is exactly what a previously-applied chunk looks like after re-tracing, so
+iterated AutoChunk stages see truthful numbers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Set
+
+from jax.extend import core as jex_core
+
+from .graph import Graph, Var, atom_bytes, is_var
+
+
+@dataclass
+class MemoryProfile:
+    """Result of the estimation pass."""
+
+    per_eqn_bytes: List[int]          # live intermediate bytes during eqn i
+    peak_bytes: int                   # max over eqns (intermediates only)
+    peak_eqn: int                     # index of the peak equation
+    io_bytes: int                     # inputs (non-weight) + outputs
+    weight_bytes: int                 # parameter memory (excluded from peak)
+
+    @property
+    def total_peak_bytes(self) -> int:
+        return self.peak_bytes + self.io_bytes
+
+
+def _inner_jaxpr_peak(eqn) -> int:
+    """Internal activation peak of a loop primitive's body (recursive)."""
+    name = eqn.primitive.name
+    closed = None
+    if name == "scan":
+        closed = eqn.params["jaxpr"]
+    elif name == "while":
+        closed = eqn.params["body_jaxpr"]
+    elif name == "cond":
+        branches = eqn.params["branches"]
+        return max(_jaxpr_peak(b.jaxpr) for b in branches)
+    if closed is None:
+        return 0
+    return _jaxpr_peak(closed.jaxpr)
+
+
+def _jaxpr_peak(jaxpr) -> int:
+    """Peak live intermediate bytes for a raw jaxpr (used for loop bodies)."""
+    last_use: Dict[Var, int] = {}
+    n = len(jaxpr.eqns)
+    for i, eqn in enumerate(jaxpr.eqns):
+        for iv in eqn.invars:
+            if isinstance(iv, jex_core.Var):
+                last_use[iv] = i
+    for ov in jaxpr.outvars:
+        if isinstance(ov, jex_core.Var):
+            last_use[ov] = n
+    inputs = set(jaxpr.invars) | set(jaxpr.constvars)
+    live: Set[Var] = set()
+    live_bytes = 0
+    peak = 0
+    for i, eqn in enumerate(jaxpr.eqns):
+        extra = _inner_jaxpr_peak(eqn)
+        out_b = 0
+        for ov in eqn.outvars:
+            if isinstance(ov, jex_core.Var) and ov not in inputs:
+                out_b += atom_bytes(ov)
+        peak = max(peak, live_bytes + out_b + extra)
+        for ov in eqn.outvars:
+            if (
+                isinstance(ov, jex_core.Var)
+                and ov not in inputs
+                and last_use.get(ov, -1) > i
+            ):
+                if ov not in live:
+                    live.add(ov)
+                    live_bytes += atom_bytes(ov)
+        dead = [v for v in live if last_use.get(v, -1) <= i]
+        for v in dead:
+            live.remove(v)
+            live_bytes -= atom_bytes(v)
+    return peak
+
+
+def estimate_memory(g: Graph) -> MemoryProfile:
+    """Run the estimation pass over a :class:`Graph`."""
+    n = len(g.eqns)
+    inputs = set(g.invars) | set(g.consts)
+    per_eqn: List[int] = []
+    live: Set[Var] = set()
+    live_bytes = 0
+    peak = 0
+    peak_eqn = 0
+    for i, eqn in enumerate(g.eqns):
+        extra = _inner_jaxpr_peak(eqn)
+        out_b = 0
+        for ov in eqn.outvars:
+            if isinstance(ov, Var) and ov not in inputs:
+                out_b += atom_bytes(ov)
+        cur = live_bytes + out_b + extra
+        per_eqn.append(cur)
+        if cur > peak:
+            peak, peak_eqn = cur, i
+        # birth
+        for ov in eqn.outvars:
+            if (
+                isinstance(ov, Var)
+                and ov not in inputs
+                and g.last_use.get(ov, -1) > i
+            ):
+                if ov not in live:
+                    live.add(ov)
+                    live_bytes += atom_bytes(ov)
+        # death
+        dead = [v for v in live if g.last_use.get(v, -1) <= i]
+        for v in dead:
+            live.remove(v)
+            live_bytes -= atom_bytes(v)
+
+    weight_b = sum(atom_bytes(v) for v in g.weight_invars)
+    io_b = (
+        sum(atom_bytes(v) for v in g.invars if v not in g.weight_invars)
+        + sum(atom_bytes(v) for v in g.outvars)
+    )
+    return MemoryProfile(
+        per_eqn_bytes=per_eqn,
+        peak_bytes=peak,
+        peak_eqn=peak_eqn,
+        io_bytes=io_b,
+        weight_bytes=weight_b,
+    )

@@ -1,0 +1,67 @@
+"""Expert-designed chunk baseline (the paper's OpenFold comparison).
+
+Hand-written chunking the way AlphaFold/OpenFold engineers do it: fixed
+chunk size, fixed regions (attention over the query dim; FFN over the
+sequence dim), applied uniformly regardless of the actual memory profile.
+AutoChunk's Fig. 7/8 claims are measured against exactly this style of
+baseline: it reduces memory, but (a) it chunks modules wholesale rather
+than the peak subgraph, and (b) its fixed chunk size over- or under-shoots
+the budget.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def chunked_over_dim(fn: Callable, x, dim: int, chunk_size: int):
+    """Expert-style manual chunk: split x along dim, lax.map fn over chunks."""
+    S = x.shape[dim]
+    if S % chunk_size:
+        return fn(x)  # experts fall back when the size doesn't divide
+    n = S // chunk_size
+    xs = jnp.moveaxis(
+        x.reshape(x.shape[:dim] + (n, chunk_size) + x.shape[dim + 1 :]), dim, 0
+    )
+    ys = lax.map(fn, xs)
+    ys = jnp.moveaxis(ys, 0, dim)
+    return ys.reshape(
+        ys.shape[:dim] + (ys.shape[dim] * ys.shape[dim + 1],) + ys.shape[dim + 2 :]
+    )
+
+
+def expert_chunk_attention(q, k, v, *, chunk_size: int = 64, causal: bool = True):
+    """Chunk queries with a fixed size (OpenFold's chunk_size=64 default)."""
+    Sq = q.shape[1]
+    kpos = jnp.arange(k.shape[1])
+
+    def one(args):
+        qc, qpos = args
+        logits = jnp.einsum("bqhd,bshd->bhqs", qc.astype(jnp.float32),
+                            k.astype(jnp.float32))
+        logits = logits / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+        if causal:
+            mask = kpos[None, :] <= qpos[:, None]
+            logits = jnp.where(mask[None, None], logits, -1e30)
+        a = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhqs,bshd->bqhd", a, v.astype(jnp.float32)).astype(q.dtype)
+
+    if Sq % chunk_size:
+        return one((q, jnp.arange(Sq)))
+    n = Sq // chunk_size
+    qs = jnp.moveaxis(q.reshape(q.shape[0], n, chunk_size, *q.shape[2:]), 1, 0)
+    qpos = jnp.arange(Sq).reshape(n, chunk_size)
+    ys = lax.map(one, (qs, qpos))
+    return jnp.moveaxis(ys, 0, 1).reshape(q.shape)
+
+
+def expert_chunk_block(block_fn: Callable, chunk_size: int = 64):
+    """Wrap a (params, x) block to chunk x over the sequence dim wholesale."""
+
+    def wrapped(params, x):
+        return chunked_over_dim(lambda xc: block_fn(params, xc), x, 1, chunk_size)
+
+    return wrapped

@@ -1,0 +1,388 @@
+"""Chunk search pass (paper §3.3, Algorithm 1).
+
+Given a Graph and its memory profile, enumerate candidate chunk regions
+``[s, e]`` containing the peak-activation equation, and for each candidate
+output dimension run a *bottom-up* (outputs → inputs) breadth-first flow
+trace using the dimflow rules.  A region survives when it satisfies the four
+legality rules:
+
+  1/2. Basic-chunk + output-alignment — every equation on the flow has a
+       dimflow rule mapping (slice-then-compute == compute-then-slice).
+  3.   Flow traceability — at least one *region input* is reached with an
+       assigned chunk dim.
+  4.   Unique setting — every var is assigned at most one chunk dim; the
+       chunk extent is invariant along the flow.
+
+Equations the flow cannot pass (iota, broken reshapes, nested loops, Pallas
+calls, ...) are *hoisted*: computed once before the loop, full, and sliced
+per-chunk where needed.  Hoisting is the constructive form of the paper's
+"graph optimization" (moving irrelevant flows out of the region) and is only
+legal when the hoisted equation does not consume a loop-computed value.
+
+Complexity controls mirror the paper: a local window of size ``k`` around
+the peak node bounds the region enumeration (O(k^2 N) -> O(k^2)), and a
+cheap two-stage prefilter rejects regions before the full flow trace
+(the paper's filter passing rate ζ).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .dimflow import FULL, propagate
+from .estimation import MemoryProfile
+from .graph import Graph, Var, atom_bytes, dim_stride, eqn_flops, is_var
+
+
+@dataclass
+class ChunkCandidate:
+    """One legal chunk: a region plus a consistent dim assignment."""
+
+    s: int
+    e: int
+    var_dim: Dict[Var, int]
+    in_loop: List[int]
+    hoisted: List[int]
+    loop_out: List[Var]
+    full_out: List[Var]
+    sliced_in: List[Tuple[Var, int]]
+    full_in: List[Var]
+    chunk_extent: int
+
+    # --- features for the selection cost ---------------------------------
+    n_nodes: int = 0
+    flops: float = 0.0
+    density: float = 0.0
+    stride_score: float = 0.0  # 1.0 == leading-dim chunk (free), ->0 minor dims
+    body_peak_bytes: int = 0   # per-chunk intermediate bytes at n=1
+    static_bytes: int = 0      # full tensors alive while the loop runs
+
+    def divisors(self) -> List[int]:
+        """Candidate chunk counts: exact divisors plus powers of two (the
+        padded-chunk codegen handles non-divisible counts exactly via
+        clamped slices — beyond-paper, the paper requires divisibility)."""
+        ext = self.chunk_extent
+        small = [d for d in range(1, int(ext ** 0.5) + 1) if ext % d == 0]
+        counts = set(small) | {ext // d for d in small}
+        p = 2
+        while p <= ext:
+            counts.add(p)
+            p *= 2
+        counts.discard(1)
+        return sorted(counts)
+
+    def chunked_body_peak(self, n: int) -> int:
+        c = -(-self.chunk_extent // n)  # ceil slice extent
+        return int(self.body_peak_bytes * c / max(self.chunk_extent, 1))
+
+    def key(self) -> Tuple:
+        return (self.s, self.e, tuple(sorted((str(v), d) for v, d in self.var_dim.items())))
+
+
+def region_io(g: Graph, s: int, e: int) -> Tuple[List[Var], List[Var]]:
+    """(inputs, outputs) of the eqn range [s, e]."""
+    produced: Set[Var] = set()
+    used: Set[Var] = set()
+    for i in range(s, e + 1):
+        eqn = g.eqns[i]
+        for iv in eqn.invars:
+            if is_var(iv):
+                used.add(iv)
+        for ov in eqn.outvars:
+            if is_var(ov):
+                produced.add(ov)
+    inputs = [v for v in used if v not in produced]
+    outputs = [
+        v
+        for i in range(s, e + 1)
+        for v in g.eqns[i].outvars
+        if is_var(v) and g.last_use.get(v, -1) > e
+    ]
+    return inputs, outputs
+
+
+def _analyze(
+    g: Graph, s: int, e: int, seed_var: Var, seed_dim: int,
+    allow_hoist: bool = True,
+) -> Optional[ChunkCandidate]:
+    """Backward flow trace for one (region, seed output dim).  None = illegal."""
+    inputs, outputs = region_io(g, s, e)
+    input_set = set(inputs)
+    var_dim: Dict[Var, int] = {seed_var: seed_dim}
+    needs_full: Set[Var] = set()
+    hoist_needed: Set[int] = set()
+
+    for i in range(e, s - 1, -1):
+        eqn = g.eqns[i]
+        assigned = [
+            (oi, var_dim[ov])
+            for oi, ov in enumerate(eqn.outvars)
+            if is_var(ov) and ov in var_dim
+        ]
+        if not assigned:
+            continue  # not on the flow (hoist or dead) — classified later
+        # All assigned outputs must agree on a propagation result.
+        merged: Optional[Dict[int, object]] = None
+        broke = False
+        for oi, od in assigned:
+            res = propagate(eqn, oi, od)
+            if res is None:
+                broke = True
+                break
+            if merged is None:
+                merged = res
+            elif merged != res:
+                return None  # conflicting requirements (Rule 4)
+        if broke:
+            hoist_needed.add(i)
+            continue
+        assert merged is not None
+        for ii, req in merged.items():
+            atom = eqn.invars[ii]
+            if not is_var(atom):
+                continue  # literals are chunk-invariant
+            if req == FULL:
+                needs_full.add(atom)
+            else:
+                prev = var_dim.get(atom)
+                if prev is not None and prev != req:
+                    return None  # Rule 4 violation
+                var_dim[atom] = req
+
+    # ---- classify equations ------------------------------------------------
+    # "Graph optimization" (paper §3.3): irrelevant / flow-breaking
+    # equations are moved out of the loop.  With allow_hoist=False (the
+    # Table-1 'no graph optimization' ablation) any region needing a hoist
+    # is rejected outright.
+    if not allow_hoist and hoist_needed:
+        return None
+    in_loop: List[int] = []
+    hoisted: List[int] = []
+    full_avail: Set[Var] = set(input_set) | set(g.consts)
+    loop_defined: Set[Var] = set()
+    for i in range(s, e + 1):
+        eqn = g.eqns[i]
+        on_flow = any(is_var(ov) and ov in var_dim for ov in eqn.outvars)
+        if on_flow and i not in hoist_needed:
+            # every input must be sliceable or fully available
+            for iv in eqn.invars:
+                if not is_var(iv):
+                    continue
+                if iv in var_dim:
+                    continue  # sliced (from outside) or loop-defined chunk
+                # needed FULL: must not be loop-defined
+                if iv in loop_defined:
+                    return None
+            in_loop.append(i)
+            loop_defined.update(ov for ov in eqn.outvars if is_var(ov))
+        else:
+            # hoisted: all inputs must be fully available (not loop-computed)
+            for iv in eqn.invars:
+                if is_var(iv) and iv in loop_defined:
+                    return None
+            hoisted.append(i)
+            full_avail.update(ov for ov in eqn.outvars if is_var(ov))
+
+    # FULL-needed vars must exist whole outside the loop
+    for v in needs_full:
+        if v in loop_defined:
+            return None
+
+    if not allow_hoist and hoisted:
+        return None
+    if not in_loop:
+        return None
+
+    # ---- region outputs ------------------------------------------------------
+    loop_out: List[Var] = []
+    full_out: List[Var] = []
+    for v in outputs:
+        if v in loop_defined:
+            if v not in var_dim:
+                return None  # loop output we cannot reassemble
+            loop_out.append(v)
+        else:
+            full_out.append(v)
+    if not loop_out:
+        return None
+
+    # ---- loop inputs ----------------------------------------------------------
+    sliced_in: List[Tuple[Var, int]] = []
+    full_in: List[Var] = []
+    seen: Set[Var] = set()
+    for i in in_loop:
+        for iv in g.eqns[i].invars:
+            if not is_var(iv) or iv in loop_defined or iv in seen:
+                continue
+            seen.add(iv)
+            if iv in g.consts:
+                continue  # bound constants ride along whole
+            if iv in var_dim:
+                sliced_in.append((iv, var_dim[iv]))
+            else:
+                full_in.append(iv)
+
+    # Rule 3: the flow must reach at least one true region input
+    if not any(v in input_set for v, _ in sliced_in):
+        return None
+
+    # Rule 4 (extent invariance): every assigned dim must share one extent
+    extents = set()
+    for v, d in sliced_in:
+        extents.add(v.aval.shape[d])
+    for v in loop_out:
+        extents.add(v.aval.shape[var_dim[v]])
+    if len(extents) != 1:
+        return None
+    (extent,) = extents
+    if extent < 2:
+        return None
+
+    cand = ChunkCandidate(
+        s=s,
+        e=e,
+        var_dim=dict(var_dim),
+        in_loop=in_loop,
+        hoisted=hoisted,
+        loop_out=loop_out,
+        full_out=full_out,
+        sliced_in=sliced_in,
+        full_in=full_in,
+        chunk_extent=extent,
+    )
+    _featurize(g, cand)
+    return cand
+
+
+def _featurize(g: Graph, c: ChunkCandidate) -> None:
+    """Fill the cost-model features (paper Eq. 8/9 inputs)."""
+    c.n_nodes = len(c.in_loop)
+    c.flops = sum(eqn_flops(g.eqns[i]) for i in c.in_loop)
+    c.density = c.flops / max(c.n_nodes, 1)
+
+    # stride score in (0, 1]: log-relative stride of the chunk dim vs the
+    # leading dim (1.0 = outermost chunk, ->0 = minor-most / relayout-heavy)
+    import math as _math
+
+    scores = []
+    for v, d in list(c.sliced_in) + [(v, c.var_dim[v]) for v in c.loop_out]:
+        shp = v.aval.shape
+        lead = dim_stride(shp, 0)
+        sd = dim_stride(shp, d)
+        scores.append(_math.log1p(sd) / max(_math.log1p(lead), 1e-9))
+    c.stride_score = sum(scores) / max(len(scores), 1)
+
+    # per-chunk body peak at n=1 (intermediates that scale with 1/n)
+    loop_set = set(c.in_loop)
+    last_use_local: Dict[Var, int] = {}
+    for i in c.in_loop:
+        for iv in g.eqns[i].invars:
+            if is_var(iv):
+                last_use_local[iv] = i
+    live = 0
+    peak = 0
+    live_set: Set[Var] = set()
+    out_set = set(c.loop_out)
+    for i in c.in_loop:
+        eqn = g.eqns[i]
+        born = [ov for ov in eqn.outvars if is_var(ov) and ov in c.var_dim]
+        live += sum(atom_bytes(ov) for ov in born)
+        live_set.update(born)
+        peak = max(peak, live)
+        dead = [
+            v
+            for v in live_set
+            if last_use_local.get(v, -1) <= i and v not in out_set
+        ]
+        for v in dead:
+            live_set.remove(v)
+            live -= atom_bytes(v)
+    c.body_peak_bytes = peak
+
+    # full tensors co-resident with the loop
+    static = sum(atom_bytes(v) for v, _ in c.sliced_in)
+    static += sum(atom_bytes(v) for v in c.full_in if v not in g.weight_invars)
+    static += sum(atom_bytes(v) for v in c.loop_out)
+    static += sum(atom_bytes(v) for v in c.full_out)
+    c.static_bytes = static
+
+
+def search_chunks(
+    g: Graph,
+    prof: MemoryProfile,
+    *,
+    window: int = 48,
+    max_region_outputs: int = 6,
+    max_candidates: int = 4096,
+    peak_eqn: Optional[int] = None,
+    allow_hoist: bool = True,
+    dim_blocklist: frozenset = frozenset(),
+) -> List[ChunkCandidate]:
+    """Enumerate legal chunks for regions containing the peak equation.
+
+    Regions are visited smallest-first (the paper's macro cost prefers few
+    nodes, and small regions dominate the useful candidate set), and a
+    cheap stage-1 prefilter rejects regions whose *unavoidable* full-size
+    tensors (crossing outputs + boundary-live values) already exceed the
+    current peak — such a chunk can never reduce memory.
+    """
+    p = prof.peak_eqn if peak_eqn is None else peak_eqn
+    n = len(g.eqns)
+    lo = max(0, p - window)
+    hi = min(n - 1, p + window)
+
+    # live-into-region bytes as a function of region start s
+    def live_in_bytes(s: int) -> int:
+        tot = 0
+        for v, prod in g.producer.items():
+            if prod < s and g.last_use.get(v, -1) >= s:
+                tot += atom_bytes(v)
+        return tot
+
+    _live_cache: Dict[int, int] = {}
+
+    pairs = [
+        (s, e)
+        for s in range(lo, p + 1)
+        for e in range(p, hi + 1)
+        if e - s < window
+    ]
+    pairs.sort(key=lambda se: (se[1] - se[0], abs(se[0] - p)))
+
+    out: List[ChunkCandidate] = []
+    seen: Set[Tuple] = set()
+    for s, e in pairs:
+        inputs, outputs = region_io(g, s, e)
+        # --- stage-1 prefilter (cheap) ------------------------------------
+        if not outputs or len(outputs) > max_region_outputs:
+            continue
+        if any(len(v.aval.shape) == 0 for v in outputs):
+            continue
+        if s not in _live_cache:
+            _live_cache[s] = live_in_bytes(s)
+        floor = _live_cache[s] + sum(atom_bytes(v) for v in outputs)
+        if floor >= prof.peak_bytes:
+            continue  # cannot possibly beat the current peak
+        # pick the seed output: produced latest, break ties by size
+        seed = max(outputs, key=lambda v: (g.producer[v], atom_bytes(v)))
+        # --- stage-2: full flow trace per candidate dim --------------------
+        for d in range(len(seed.aval.shape)):
+            if seed.aval.shape[d] < 2:
+                continue
+            if d in dim_blocklist:
+                # sharding-aware selection (beyond-paper): never chunk a
+                # mesh-sharded dim — slicing the data-parallel batch axis
+                # into sub-shard pieces forces GSPMD to replicate the loop
+                # body (measured 2x temp regression on granite prefill).
+                continue
+            cand = _analyze(g, s, e, seed, d, allow_hoist=allow_hoist)
+            if cand is None:
+                continue
+            k = cand.key()
+            if k in seen:
+                continue
+            seen.add(k)
+            out.append(cand)
+            if len(out) >= max_candidates:
+                return out
+    return out

@@ -1,0 +1,175 @@
+"""Chunk selection pass (paper §3.4): cost model + DP/beam search.
+
+Implements the paper's two-level cost
+
+    L = L_macro + L_micro
+      = alpha*N_node + beta*N_flop  +  gamma*f(N_density) + lam*g(N_stride)
+
+with each term normalized into [0, 1] over the candidate set so the
+hyper-parameters weigh *relative* preferences (the paper tunes them
+automatically; our defaults follow Table 1's sensitivity ordering —
+stride > density > nodes > flops).
+
+Density and stride enter *inversely*: the paper observes that
+high-compute-density regions tolerate chunking (the MXU stays busy even on
+a slice) and that large-stride (outer) dims chunk cheaply — on TPU, slicing
+a minor-most dim would force lane-relayouts, which is the hardware reason
+behind the same preference the paper motivates with memory coalescing.
+
+Selection proper is the paper's iterated DP-with-beam (Eq. 11): each stage
+scores all candidates, and the driver (api.py) fully re-traces the top-beam
+survivors and keeps the best verified plan, iterating until the peak fits
+the budget.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+from .estimation import MemoryProfile
+from .graph import Graph, atom_bytes, graph_flops, is_var
+from .search import ChunkCandidate
+
+
+@dataclass
+class CostHyper:
+    alpha: float = 1.5   # macro: number of nodes chunked
+    beta: float = 1.0    # macro: flops chunked
+    gamma: float = 2.0   # micro: (inverse) compute density
+    lam: float = 4.0     # micro: (inverse) chunk-dim stride
+    # term switches for the Table-1 ablation benchmark
+    use_nodes: bool = True
+    use_flops: bool = True
+    use_density: bool = True
+    use_stride: bool = True
+
+
+def chunk_cost(
+    g: Graph,
+    cand: ChunkCandidate,
+    hyper: CostHyper,
+    *,
+    total_flops: float,
+    max_density: float,
+) -> float:
+    node_term = cand.n_nodes / max(len(g.eqns), 1)
+    flop_term = cand.flops / max(total_flops, 1.0)
+    density_term = 1.0 - cand.density / max(max_density, 1.0)
+    stride_term = 1.0 - cand.stride_score
+    cost = 0.0
+    if hyper.use_nodes:
+        cost += hyper.alpha * node_term
+    if hyper.use_flops:
+        cost += hyper.beta * flop_term
+    if hyper.use_density:
+        cost += hyper.gamma * density_term
+    if hyper.use_stride:
+        cost += hyper.lam * stride_term
+    return cost
+
+
+def estimate_new_peak(
+    g: Graph, prof: MemoryProfile, cand: ChunkCandidate, n: int
+) -> Tuple[int, int]:
+    """Analytic post-chunk (global_peak, region_contribution) for chunk count n.
+
+    The global estimate is verified later by a true re-trace; the region
+    contribution is what the chunked loop itself will occupy — it must fit
+    the budget on its own, or no later stage can ever fix it (a chunked
+    scan is opaque to further chunking).
+    """
+    outside = 0
+    for i, b in enumerate(prof.per_eqn_bytes):
+        if i < cand.s or i > cand.e:
+            outside = max(outside, b)
+    # intermediates live across the region boundary
+    live_in = 0
+    for v, p in g.producer.items():
+        if p < cand.s and g.last_use.get(v, -1) >= cand.s:
+            live_in += atom_bytes(v)
+    hoist_b = sum(
+        atom_bytes(ov)
+        for i in cand.hoisted
+        for ov in g.eqns[i].outvars
+        if is_var(ov)
+    )
+    out_b = sum(atom_bytes(v) for v in cand.loop_out)
+    out_b += sum(atom_bytes(v) for v in cand.full_out)
+    region = live_in + hoist_b + out_b + cand.chunked_body_peak(n)
+    return max(outside, region), region
+
+
+def choose_n(
+    g: Graph,
+    prof: MemoryProfile,
+    cand: ChunkCandidate,
+    budget_bytes: int,
+    *,
+    mxu_align: int = 128,
+    margin: float = 0.95,
+) -> Tuple[int, int, int]:
+    """Pick the chunk count: the smallest n whose *region contribution* fits
+    ``margin * budget`` (so the chunked loop is never the binding constraint
+    afterwards), preferring MXU-aligned slice extents.
+
+    Returns (n, estimated_global_peak, region_contribution).  Falls back to
+    the largest divisor when nothing fits (progress still possible).
+    """
+    target = int(budget_bytes * margin)
+    best: Optional[Tuple[int, int, int]] = None
+    divisors = cand.divisors()
+    for n in divisors:
+        est, region = estimate_new_peak(g, prof, cand, n)
+        if region <= target:
+            slice_ext = cand.chunk_extent // n
+            aligned = slice_ext % mxu_align == 0 or slice_ext >= mxu_align
+            if aligned:
+                return n, est, region
+            if best is None:
+                best = (n, est, region)
+    if best is not None:
+        return best
+    # Nothing fits: the loop's *static* tensors (inputs/outputs/hoists)
+    # dominate.  Pick the smallest n whose per-chunk body is negligible
+    # next to the static floor — larger n only costs speed.
+    _, static = estimate_new_peak(g, prof, cand, max(divisors or [2]))
+    for n in divisors:
+        if cand.chunked_body_peak(n) <= max(static // 8, 1):
+            est, region = estimate_new_peak(g, prof, cand, n)
+            return n, est, region
+    n = divisors[-1] if divisors else 1
+    est, region = estimate_new_peak(g, prof, cand, n)
+    return n, est, region
+
+
+def rank_candidates(
+    g: Graph,
+    prof: MemoryProfile,
+    cands: List[ChunkCandidate],
+    budget_bytes: int,
+    hyper: CostHyper,
+) -> List[Tuple[ChunkCandidate, int, int, float]]:
+    """Score every candidate; return [(cand, n, est_peak, cost)] best-first."""
+    if not cands:
+        return []
+    total_flops = graph_flops(g)
+    max_density = max(c.density for c in cands)
+    scored = []
+    for c in cands:
+        n, est, region = choose_n(g, prof, c, budget_bytes)
+        if n < 2:
+            continue
+        if est > prof.peak_bytes:
+            continue  # strictly worse than doing nothing
+        cost = chunk_cost(g, c, hyper, total_flops=total_flops, max_density=max_density)
+        meets = est <= budget_bytes
+        scored.append((c, n, est, region, cost, meets))
+    # Budget-constrained ordering (Eq. 11): among candidates that meet the
+    # budget, minimize L; when none can meet it in one stage, maximize
+    # memory progress (global estimate, then the region's own durable
+    # contribution) so later stages can finish the job.
+    scored.sort(
+        key=lambda t: (not t[5],)
+        + ((t[4], t[2]) if t[5] else (t[2], t[3], t[4]))
+    )
+    return [(c, n, est, cost) for c, n, est, region, cost, _ in scored]

@@ -1,0 +1,3 @@
+from .synthetic import batch_specs, make_batch, synthetic_stream
+
+__all__ = ["batch_specs", "make_batch", "synthetic_stream"]

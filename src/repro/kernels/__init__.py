@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the compute hot-spots the paper targets.
+
+Each kernel ships with a jit'd wrapper (ops.py) and a pure-jnp oracle
+(ref.py); tests sweep shapes/dtypes in interpret mode.
+"""
+from . import ops, ref
+from .chunked_attention import chunked_attention
+from .chunked_ffn import chunked_ffn
+from .rglru_scan import rglru_scan
+from .ssd_scan import ssd_scan
+
+__all__ = [
+    "ops",
+    "ref",
+    "chunked_attention",
+    "chunked_ffn",
+    "rglru_scan",
+    "ssd_scan",
+]

@@ -1,0 +1,116 @@
+"""Flash-style chunked attention Pallas kernel (TPU target).
+
+This is the TPU-native realization of the paper's fused-attention baseline
+(Rabe & Staats / FlashAttention): the KV sequence is streamed through VMEM
+in blocks with an online-softmax accumulator, so the (Sq, Skv) logits matrix
+never materializes in HBM.  Where AutoChunk chunks at the *graph* level
+(lax.scan over slices), this kernel chunks at the *memory-hierarchy* level
+(HBM -> VMEM BlockSpecs); Fig. 6 of the paper composes the two.
+
+Grid: (batch*heads, q_blocks, kv_blocks) — kv innermost so the VMEM scratch
+accumulator carries across kv steps; output is written on the last kv step.
+Block shapes default to (128, head_dim): MXU-aligned on the contraction.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *, scale: float, causal: bool, window, bq: int, bkv: int, sq: int, skv: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)          # (bkv, hd)
+    v = v_ref[0].astype(jnp.float32)          # (bkv, hd)
+    s = q @ k.T * scale                        # (bq, bkv)
+
+    # positions: queries are right-aligned to the kv sequence
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0) + (skv - sq)
+    kpos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = jnp.ones((bq, bkv), jnp.bool_)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (qpos - kpos < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                        # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                     # (bq, bkv)
+    alpha = jnp.exp(m_prev - m_new)            # (bq, 1)
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + p @ v
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def chunked_attention(
+    q, k, v, *,
+    causal: bool = True,
+    window=None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+):
+    """q: (B,Sq,H,hd); k,v: (B,Skv,H,hd) -> (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv)
+    assert Sq % bq == 0 and Skv % bkv == 0, (Sq, bq, Skv, bkv)
+    scale = 1.0 / math.sqrt(hd)
+
+    qf = jnp.moveaxis(q, 2, 1).reshape(B * H, Sq, hd)
+    kf = jnp.moveaxis(k, 2, 1).reshape(B * H, Skv, hd)
+    vf = jnp.moveaxis(v, 2, 1).reshape(B * H, Skv, hd)
+
+    grid = (B * H, Sq // bq, Skv // bkv)
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=scale, causal=causal, window=window,
+        bq=bq, bkv=bkv, sq=Sq, skv=Skv,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, hd), q.dtype),
+        # VMEM accumulators carried across the (innermost) kv grid dimension
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return jnp.moveaxis(out.reshape(B, H, Sq, hd), 1, 2)

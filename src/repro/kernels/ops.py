@@ -1,0 +1,78 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On this CPU container the kernels run in interpret mode (``interpret=True``
+executes the kernel body in Python for correctness); on TPU the same call
+compiles to Mosaic.  ``INTERPRET`` flips automatically from the backend.
+GQA inputs are expanded to full heads before the attention kernel (the
+kernel itself is head-uniform).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .chunked_attention import chunked_attention as _attn
+from .chunked_ffn import chunked_ffn as _ffn
+from .rglru_scan import rglru_scan as _rglru
+from .ssd_scan import ssd_scan as _ssd
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def _expand_gqa(k, H):
+    Kv = k.shape[2]
+    if Kv == H:
+        return k
+    return jnp.repeat(k, H // Kv, axis=2)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_kv"))
+def attention(q, k, v, *, causal=True, window=None, block_q=128, block_kv=128):
+    """GQA-aware fused attention.  q: (B,Sq,H,hd); k,v: (B,Skv,Kv,hd)."""
+    H = q.shape[2]
+    k = _expand_gqa(k, H)
+    v = _expand_gqa(v, H)
+    bq = min(block_q, q.shape[1])
+    bkv = min(block_kv, k.shape[1])
+    while q.shape[1] % bq:
+        bq //= 2
+    while k.shape[1] % bkv:
+        bkv //= 2
+    return _attn(
+        q, k, v, causal=causal, window=window,
+        block_q=max(bq, 1), block_kv=max(bkv, 1), interpret=INTERPRET,
+    )
+
+
+@partial(jax.jit, static_argnames=("block_s", "block_f"))
+def swiglu_ffn(x, w_gate, w_up, w_down, *, block_s=128, block_f=512):
+    S = x.shape[0]
+    f = w_gate.shape[1]
+    bs = min(block_s, S)
+    bf = min(block_f, f)
+    while S % bs:
+        bs //= 2
+    while f % bf:
+        bf //= 2
+    return _ffn(x, w_gate, w_up, w_down, block_s=max(bs, 1), block_f=max(bf, 1),
+                interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd(x, dt, A, B, C, *, chunk=128):
+    s = x.shape[1]
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    return _ssd(x, dt, A, B, C, chunk=max(q, 1), interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def rglru(a, b, *, chunk=256):
+    s = a.shape[1]
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    return _rglru(a, b, chunk=max(q, 1), interpret=INTERPRET)

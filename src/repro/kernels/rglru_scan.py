@@ -1,0 +1,61 @@
+"""RG-LRU gated linear recurrence Pallas kernel (RecurrentGemma).
+
+h_t = a_t * h_{t-1} + b_t over channel vectors.  The hidden state lives in
+VMEM scratch across sequence-chunk grid steps; within a chunk the recurrence
+runs as an in-register fori_loop over rows.  This is the sequential form —
+on TPU it trades the associative scan's log-depth for zero re-materialized
+intermediates, which is the right trade during decode-oriented prefill of
+very long sequences.
+
+Grid: (B, n_chunks) — chunks innermost (sequential carry).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, y_ref, h_ref, *, q: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)   # (Q, D)
+    b = b_ref[0].astype(jnp.float32)   # (Q, D)
+
+    def body(t, h):
+        h = a[t] * h + b[t]
+        y_ref[0, t] = h.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, q, body, h_ref[0])
+    h_ref[0] = h
+
+
+def rglru_scan(a, b, *, chunk: int = 256, interpret: bool = False):
+    """a, b: (B, S, D) -> h: (B, S, D) with h_t = a_t h_{t-1} + b_t."""
+    B, S, D = a.shape
+    q = min(chunk, S)
+    assert S % q == 0
+    nc = S // q
+    ak = a.reshape(B, nc, q, D)
+    bk = b.reshape(B, nc, q, D)
+    out = pl.pallas_call(
+        functools.partial(_rglru_kernel, q=q),
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, None, q, D), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, None, q, D), lambda bi, ci: (bi, ci, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, None, q, D), lambda bi, ci: (bi, ci, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nc, q, D), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, D), jnp.float32)],
+        interpret=interpret,
+    )(ak, bk)
+    return out.reshape(B, S, D)

@@ -1,0 +1,95 @@
+"""Mamba-2 SSD Pallas kernel: chunked state-space scan.
+
+The SSD algorithm is the paper's chunking insight expressed at the kernel
+level: quadratic attention-like compute *within* a VMEM-resident chunk,
+linear state passing *between* chunks.  The (P, N) state is carried in VMEM
+scratch across the innermost (chunk) grid dimension, so HBM traffic is the
+inputs/outputs only — never the (S, S) semiseparable matrix.
+
+Grid: (B, H, n_chunks) — chunks innermost (sequential state carry).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, st_ref, *, q: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        st_ref[...] = jnp.zeros_like(st_ref)
+
+    A = a_ref[0].astype(jnp.float32)            # scalar decay rate (this head)
+    x = x_ref[0, 0].astype(jnp.float32)         # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)       # (Q, 1) -> (Q,)
+    dt = dt[:, 0]
+    b = b_ref[0].astype(jnp.float32)            # (Q, N)
+    c = c_ref[0].astype(jnp.float32)            # (Q, N)
+
+    a = A * dt                                   # (Q,), negative
+    a_cum = jnp.cumsum(a)                        # (Q,)
+
+    # intra-chunk (masked semiseparable block)
+    seg = a_cum[:, None] - a_cum[None, :]        # (Q, Q)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    L = jnp.where(jj <= ii, jnp.exp(seg), 0.0)
+    scores = (c @ b.T) * L * dt[None, :]         # (Q, Q)
+    y = scores @ x                               # (Q, P)
+
+    # inter-chunk contribution from the carried state
+    state = st_ref[...]                          # (P, N)
+    y += (c * jnp.exp(a_cum)[:, None]) @ state.T
+
+    # state update: decay + this chunk's outer products
+    a_end = a_cum[-1]
+    w = dt * jnp.exp(a_end - a_cum)              # (Q,)
+    st_ref[...] = jnp.exp(a_end) * state + (x * w[:, None]).T @ b
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(
+    x, dt, A, B, C, *,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    """x: (b,s,h,p); dt: (b,s,h) post-softplus; A: (h,); B,C: (b,s,n).
+
+    Returns y: (b,s,h,p).  s must be divisible by chunk (wrapper pads).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0
+    nc = s // q
+
+    xk = x.transpose(0, 2, 1, 3).reshape(b, h, nc, q, p)
+    dtk = dt.transpose(0, 2, 1).reshape(b, h, nc, q, 1)
+    bk = B.reshape(b, nc, q, n)
+    ck = C.reshape(b, nc, q, n)
+
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, q=q),
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, 1, None, q, p), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, None, q, 1), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, None, q, n), lambda bi, hi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, None, q, n), lambda bi, hi, ci: (bi, ci, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, None, q, p), lambda bi, hi, ci: (bi, hi, ci, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, nc, q, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(A, xk, dtk, bk, ck)
+    return out.reshape(b, h, s, p).transpose(0, 2, 1, 3)

@@ -1,0 +1,1 @@
+"""Launcher: production meshes, sharding rules, dry-run, train/serve drivers."""

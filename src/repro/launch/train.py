@@ -1,0 +1,56 @@
+"""Distributed training driver.
+
+On real hardware this runs the pjit train step on the production mesh; on
+this CPU container use ``--local`` (single device, reduced config) — the
+end-to-end ~100M-param example lives in examples/train_100m.py.
+
+  PYTHONPATH=src python -m repro.launch.train --arch minitron-4b --local \
+      --steps 200 --batch 8 --seq 256
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from ..configs import get_config
+from ..data import synthetic_stream
+from ..models import model as M
+from ..training import run_train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--local", action="store_true",
+                    help="reduced config on the local device (CPU-runnable)")
+    ap.add_argument("--autochunk", type=float, default=None)
+    ap.add_argument("--checkpoint", type=str, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.local:
+        cfg = cfg.reduced().with_(dtype="float32")
+    if args.autochunk:
+        cfg = cfg.with_(autochunk_budget=args.autochunk)
+
+    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[train] {cfg.name} ({cfg.family}); {n/1e6:.1f}M params;"
+          f" batch={args.batch} seq={args.seq}")
+    data = synthetic_stream(cfg, args.batch, args.seq, seed=args.seed)
+    params, _, history = run_train(
+        cfg, params, data,
+        steps=args.steps, base_lr=args.lr,
+        checkpoint_path=args.checkpoint, checkpoint_every=0,
+    )
+    print(f"[train] done: loss {history[0]['loss']:.4f} -> {history[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

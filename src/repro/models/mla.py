@@ -1,0 +1,104 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3, arXiv:2412.19437).
+
+Prefill uses the standard (decompressed) form; decode uses the *absorbed*
+form that attends directly against the compressed latent cache
+(kv_lora_rank + qk_rope_dim per token), which is the entire point of MLA:
+the KV cache is ~(512+64) floats/token instead of 2*128*192.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, rmsnorm
+
+
+def mla_params(cfg, key):
+    d = cfg.d_model
+    H = cfg.n_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d)
+    dt = cfg.jdtype
+    return {
+        "w_dq": (jax.random.normal(ks[0], (d, qr)) * s).astype(dt),
+        "q_norm": jnp.zeros((qr,), dt),
+        "w_uq": (jax.random.normal(ks[1], (qr, H * (dn + dr))) / math.sqrt(qr)).astype(dt),
+        "w_dkv": (jax.random.normal(ks[2], (d, kr)) * s).astype(dt),
+        "kv_norm": jnp.zeros((kr,), dt),
+        "w_uk": (jax.random.normal(ks[3], (H, kr, dn)) / math.sqrt(kr)).astype(dt),
+        "w_uv": (jax.random.normal(ks[4], (H, kr, dv)) / math.sqrt(kr)).astype(dt),
+        "w_kr": (jax.random.normal(ks[5], (d, dr)) * s).astype(dt),
+        "w_o": (jax.random.normal(ks[6], (H * dv, d)) / math.sqrt(H * dv)).astype(dt),
+    }
+
+
+def mla_latent(cfg, p, x, positions):
+    """Compressed per-token latent: (ckv (B,S,kr), k_rope (B,S,dr))."""
+    ckv = rmsnorm(x @ p["w_dkv"], p["kv_norm"])
+    k_rope = (x @ p["w_kr"])[:, :, None, :]          # (B,S,1,dr)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+    return ckv, k_rope
+
+
+def mla_queries(cfg, p, x, positions):
+    """(q_nope (B,S,H,dn), q_rope (B,S,H,dr))."""
+    B, S, _ = x.shape
+    H, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = rmsnorm(x @ p["w_dq"], p["q_norm"])
+    q = (cq @ p["w_uq"]).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_attention_prefill(cfg, p, x, positions, *, window=None):
+    """Standard-form MLA over a full sequence (causal)."""
+    B, S, _ = x.shape
+    H, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope = mla_queries(cfg, p, x, positions)
+    ckv, k_rope = mla_latent(cfg, p, x, positions)
+    k_nope = jnp.einsum("bsk,hkd->bshd", ckv, p["w_uk"])
+    v = jnp.einsum("bsk,hkd->bshd", ckv, p["w_uv"])
+    scale = 1.0 / math.sqrt(dn + dr)
+    logits = (
+        jnp.einsum("bqhd,bshd->bhqs", q_nope.astype(jnp.float32), k_nope.astype(jnp.float32))
+        + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32))
+    ) * scale
+    qp = positions[:, None] if positions.ndim == 1 else positions
+    mask = positions[:, None] >= positions[None, :]
+    if window is not None:
+        mask = mask & (positions[:, None] - positions[None, :] < window)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    a = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", a, v.astype(jnp.float32)).astype(x.dtype)
+    return out.reshape(B, S, H * dv) @ p["w_o"], (ckv, k_rope)
+
+
+def mla_attention_decode(cfg, p, x, cache_ckv, cache_krope, pos, kv_valid):
+    """Absorbed-form single-token decode against the latent cache.
+
+    x: (B, 1, d); cache_ckv: (B, S, kr); cache_krope: (B, S, dr);
+    kv_valid: (S,) bool.  Returns (out (B,1,d), new latent for this token).
+    """
+    B = x.shape[0]
+    H, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q_nope, q_rope = mla_queries(cfg, p, x, positions)
+    new_ckv, new_krope = mla_latent(cfg, p, x, positions)
+    # absorb W_uk into the query: q_eff (B,1,H,kr)
+    q_eff = jnp.einsum("bqhd,hkd->bqhk", q_nope, p["w_uk"])
+    scale = 1.0 / math.sqrt(dn + dr)
+    logits = (
+        jnp.einsum("bqhk,bsk->bhqs", q_eff.astype(jnp.float32), cache_ckv.astype(jnp.float32))
+        + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32), cache_krope.astype(jnp.float32))
+    ) * scale
+    logits = jnp.where(kv_valid[None, None, None, :], logits, -1e30)
+    a = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bhqs,bsk->bqhk", a, cache_ckv.astype(jnp.float32))
+    out = jnp.einsum("bqhk,hkd->bqhd", o_lat, p["w_uv"].astype(jnp.float32)).astype(x.dtype)
+    return out.reshape(B, 1, H * dv) @ p["w_o"], (new_ckv, new_krope)

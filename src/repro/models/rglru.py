@@ -1,0 +1,95 @@
+"""RecurrentGemma / Griffin recurrent block: RG-LRU + causal conv
+(arXiv:2402.19427).
+
+Full-sequence form uses ``lax.associative_scan`` (log-depth linear
+recurrence); decode carries the hidden state.  The Pallas kernel
+(kernels/rglru_scan.py) implements the sequential form with VMEM tiling.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .ssm import causal_conv1d, conv1d_step
+
+_C = 8.0  # Griffin's fixed temperature on the recurrence gate
+
+
+def rglru_params(cfg, key):
+    d = cfg.d_model
+    dr = d  # lru_width == d_model for recurrentgemma-9b
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    dt = cfg.jdtype
+    return {
+        "w_x": (jax.random.normal(ks[0], (d, dr)) * s).astype(dt),
+        "w_gate": (jax.random.normal(ks[1], (d, dr)) * s).astype(dt),
+        "conv_w": (jax.random.normal(ks[2], (cfg.rglru_conv_width, dr))
+                   / math.sqrt(cfg.rglru_conv_width)).astype(dt),
+        "conv_b": jnp.zeros((dr,), dt),
+        "w_a": (jax.random.normal(ks[3], (dr, dr)) / math.sqrt(dr)).astype(dt),
+        "b_a": jnp.zeros((dr,), dt),
+        "w_i": (jax.random.normal(ks[4], (dr, dr)) / math.sqrt(dr)).astype(dt),
+        "b_i": jnp.zeros((dr,), dt),
+        "lam": (jnp.ones((dr,), jnp.float32) * 2.0),  # softplus^-1-ish init
+        "w_out": (jax.random.normal(ks[5], (dr, d)) / math.sqrt(dr)).astype(dt),
+    }
+
+
+def _gates(p, xc):
+    r = jax.nn.sigmoid(xc @ p["w_a"] + p["b_a"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(xc @ p["w_i"] + p["b_i"]).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # (B,S,dr), negative
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * xc.astype(jnp.float32)
+    )
+    return a, b
+
+
+def rglru_scan(p, xc):
+    """h_t = a_t * h_{t-1} + b_t via associative scan.  xc: (B,S,dr)."""
+    a, b = _gates(p, xc)
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, ar * bl + br
+
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(xc.dtype)
+
+
+def rglru_step(p, state, x_t):
+    """Single decode step.  state: (B,dr) f32; x_t: (B,dr)."""
+    a, b = _gates(p, x_t[:, None, :])
+    h = a[:, 0] * state + b[:, 0]
+    return h, h.astype(x_t.dtype)
+
+
+def recurrent_block(cfg, p, x, *, state=None, conv_state=None, decode=False):
+    """Griffin recurrent block.  x: (B,S,d) -> (y, (state, conv_state))."""
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    xb = x @ p["w_x"]
+    if decode:
+        conv_state, xc = conv1d_step(conv_state, xb[:, 0], p["conv_w"], p["conv_b"])
+        state, h = rglru_step(p, state, xc)
+        h = h[:, None, :]
+    else:
+        xc = causal_conv1d(xb, p["conv_w"], p["conv_b"])
+        h = rglru_scan(p, xc)
+        state = h[:, -1].astype(jnp.float32)
+        conv_state = xb[:, -(cfg.rglru_conv_width - 1):, :]
+    return (gate * h) @ p["w_out"], (state, conv_state)
+
+
+def rglru_state_specs(cfg, batch):
+    dr = cfg.d_model
+    return (
+        jax.ShapeDtypeStruct((batch, dr), jnp.float32),
+        jax.ShapeDtypeStruct((batch, cfg.rglru_conv_width - 1, dr), cfg.jdtype),
+    )

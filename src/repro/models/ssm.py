@@ -1,0 +1,167 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+The SSD algorithm is *natively chunked*: the sequence is processed in
+chunks with quadratic (attention-like) intra-chunk compute and a linear
+inter-chunk state recurrence — the same memory/compute trade AutoChunk
+makes at the graph level (see DESIGN.md §5).  The pure-jnp form below is
+the reference; the Pallas kernel (kernels/ssd_scan.py) implements the same
+contraction with VMEM tiling.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import rmsnorm
+
+
+def ssm_params(cfg, key):
+    d, di = cfg.d_model, cfg.d_inner
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    W = cfg.ssm_conv_width
+    conv_ch = di + 2 * N
+    ks = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d)
+    dt = cfg.jdtype
+    return {
+        "w_in": (jax.random.normal(ks[0], (d, 2 * di + 2 * N + H)) * s).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (W, conv_ch)) / math.sqrt(W)).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "out_norm": jnp.zeros((di,), dt),
+        "w_out": (jax.random.normal(ks[2], (di, d)) / math.sqrt(di)).astype(dt),
+    }
+
+
+def causal_conv1d(x, w, b):
+    """x: (B,S,C); w: (W,C) depthwise causal conv."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def conv1d_step(conv_state, x_t, w, b):
+    """conv_state: (B, W-1, C); x_t: (B, C) -> (new_state, y_t)."""
+    W = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,W,C)
+    y = jnp.einsum("bwc,wc->bc", window, w) + b
+    return window[:, 1:], y
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD forward over a full sequence (Mamba-2 Listing 1, chunked).
+
+    x: (b,s,h,p); dt: (b,s,h) (post-softplus); A: (h,) (negative);
+    B, C: (b,s,n).  Returns (y (b,s,h,p), final_state (b,h,p,n)).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    if s % chunk:  # zero-pad: dt=0 steps are identities for the state
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        y, st = ssd_chunked(x, dt, A, B, C, chunk)
+        return y[:, :s], st
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, chunk, n).astype(jnp.float32)
+
+    a = A[None, None, None, :] * dtc                 # (b,nc,q,h), negative
+    a_cum = jnp.cumsum(a, axis=2)
+
+    # --- intra-chunk (diagonal blocks) -----------------------------------
+    seg = a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :]   # (b,nc,i,j,h)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.exp(jnp.where(causal[None, None, :, :, None], seg, -jnp.inf))
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)
+    y_diag = jnp.einsum("bcij,bcijh,bcjh,bcjhp->bcihp", cb, L, dtc, xc)
+
+    # --- chunk states ------------------------------------------------------
+    decay_states = jnp.exp(a_cum[:, :, -1:, :] - a_cum)       # (b,nc,q,h)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bc, dtc * decay_states, xc)
+
+    # --- inter-chunk recurrence -------------------------------------------
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])                  # (b,nc,h)
+
+    def step(hprev, inp):
+        st, dec = inp
+        hnew = dec[:, :, None, None] * hprev + st
+        return hnew, hprev
+
+    st_sw = jnp.moveaxis(states, 1, 0)        # (nc,b,h,p,n)
+    dec_sw = jnp.moveaxis(chunk_decay, 1, 0)  # (nc,b,h)
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    h_final, hprevs = lax.scan(step, h0, (st_sw, dec_sw))
+    hprevs = jnp.moveaxis(hprevs, 0, 1)       # (b,nc,h,p,n)
+
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp", Cc, hprevs, jnp.exp(a_cum))
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    """Recurrent single step.  state: (b,h,p,n); x_t: (b,h,p);
+    dt_t: (b,h); B_t, C_t: (b,n)."""
+    da = jnp.exp(A[None, :] * dt_t)                            # (b,h)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt_t, x_t, B_t)
+    state = da[:, :, None, None] * state + upd
+    y = jnp.einsum("bn,bhpn->bhp", C_t, state)
+    return state, y
+
+
+def ssm_block(cfg, p, x, *, state=None, conv_state=None, decode: bool = False):
+    """Mamba-2 block.  Full-seq: x (B,S,d) -> (y, (ssd_state, conv_state)).
+    Decode: x (B,1,d) with carried (state, conv_state)."""
+    B_, S, d = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x @ p["w_in"]
+    z, xs, Bm, Cm, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1
+    )
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    if decode:
+        conv_state, conv_out = conv1d_step(
+            conv_state, conv_in[:, 0], p["conv_w"], p["conv_b"]
+        )
+        conv_out = conv_out[:, None, :]
+    else:
+        conv_out = causal_conv1d(conv_in, p["conv_w"], p["conv_b"])
+        conv_state = conv_in[:, -(cfg.ssm_conv_width - 1):, :]
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bm, Cm = jnp.split(conv_out, [di, di + N], axis=-1)
+    xh = xs.reshape(B_, S, H, P)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    if decode:
+        state, yh = ssd_decode_step(
+            state, xh[:, 0], dtp[:, 0], A, Bm[:, 0], Cm[:, 0]
+        )
+        yh = yh[:, None]
+    else:
+        yh, state = ssd_chunked(xh, dtp, A, Bm, Cm, min(cfg.ssm_chunk, S))
+    yh = yh + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = yh.reshape(B_, S, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["out_norm"])
+    return y @ p["w_out"], (state, conv_state)
+
+
+def ssm_state_specs(cfg, batch):
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_ch = cfg.d_inner + 2 * N
+    return (
+        jax.ShapeDtypeStruct((batch, H, P, N), jnp.float32),
+        jax.ShapeDtypeStruct((batch, cfg.ssm_conv_width - 1, conv_ch), cfg.jdtype),
+    )

@@ -1,0 +1,78 @@
+"""AdamW in pure JAX (pytree-structured, shard-friendly).
+
+Moments are stored in the parameter dtype by default to keep the optimizer
+state FSDP-shardable at DeepSeek scale; pass ``moment_dtype='float32'`` for
+small models.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params, moment_dtype: Optional[str] = None) -> AdamWState:
+    def zeros_like(p):
+        dt = jnp.dtype(moment_dtype) if moment_dtype else p.dtype
+        return jnp.zeros(p.shape, dt)
+
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros_like, params),
+        nu=jax.tree.map(zeros_like, params),
+    )
+
+
+def adamw_update(
+    params,
+    grads,
+    state: AdamWState,
+    lr,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: Optional[float] = 1.0,
+):
+    """One AdamW step.  Returns (new_params, new_state)."""
+    if grad_clip is not None:
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v2 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+        mhat = m2 / c1
+        vhat = v2 / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (
+            (p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+            m2.astype(m.dtype),
+            v2.astype(v.dtype),
+        )
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v)

@@ -1,0 +1,193 @@
+"""Batched serving engine: slot-based continuous batching over the decode step.
+
+Each of ``max_batch`` slots holds one request's KV/state cache (leading slot
+axis via vmap, so every slot advances with its own position counter — slots
+are never forced into lockstep).  Prefill runs per request (B=1) and the
+resulting cache row is written into a free slot; a single jitted vmapped
+decode wave then advances all active slots together.
+
+AutoChunk integration: pass ``autochunk_budget`` to compile the per-slot
+decode step under a memory budget — the engine is the paper's serving
+use-case (long-sequence inference on limited-memory hardware).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import model as M
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+    submitted_at: float = field(default_factory=time.time)
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_at is None:
+            return None
+        return self.first_token_at - self.submitted_at
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.submitted_at
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        max_batch: int = 4,
+        max_len: int = 256,
+        autochunk_budget: Optional[float] = None,
+        greedy: bool = True,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.greedy = greedy
+        self.key = jax.random.PRNGKey(seed)
+
+        # each slot keeps its own B=1 cache; slots are stacked on a fresh
+        # leading axis that the decode wave vmaps over
+        cache1 = M.init_cache(cfg, 1, max_len)
+        self.cache = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (max_batch,) + x.shape).copy(), cache1
+        )
+        self.slot_req: List[Optional[Request]] = [None] * max_batch
+        self.slot_pos = [0] * max_batch
+        self.waiting: List[Request] = []
+        self.finished: List[Request] = []
+        self.n_decode_steps = 0
+
+        def _row_decode(cache_row, tok, pos):
+            logits, nc = M.decode_step(
+                cfg, self.params, cache_row, tok[None, None], pos
+            )
+            return logits[0, 0], nc
+
+        decode_wave = jax.vmap(_row_decode)
+        if autochunk_budget is not None:
+            from ..core import autochunk
+
+            tok_spec = jax.ShapeDtypeStruct((max_batch,), jnp.int32)
+            pos_spec = jax.ShapeDtypeStruct((max_batch,), jnp.int32)
+            cache_spec = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.cache
+            )
+            decode_wave = autochunk(
+                decode_wave,
+                (cache_spec, tok_spec, pos_spec),
+                memory_budget=autochunk_budget,
+                weight_argnums=(),
+            )
+        self._decode_wave = jax.jit(decode_wave)
+        self._prefill = jax.jit(
+            lambda batch: M.prefill(cfg, self.params, batch, max_len)
+        )
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.waiting.append(req)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _admit(self):
+        for slot in self._free_slots():
+            if not self.waiting:
+                break
+            req = self.waiting.pop(0)
+            toks = jnp.asarray([req.prompt], dtype=jnp.int32)
+            logits, cache1 = self._prefill({"tokens": toks})
+            self.cache = jax.tree.map(
+                lambda full, r: full.at[slot].set(r), self.cache, cache1
+            )
+            first = int(jnp.argmax(logits[0, -1]))
+            req.generated.append(first)
+            req.first_token_at = time.time()
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = len(req.prompt)
+
+    def _retire(self):
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            hit_eos = req.eos_id is not None and req.generated and req.generated[-1] == req.eos_id
+            if len(req.generated) >= req.max_new_tokens or hit_eos:
+                req.done = True
+                req.finished_at = time.time()
+                self.finished.append(req)
+                self.slot_req[i] = None
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """Admit -> decode one wave -> retire."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return
+        toks = jnp.asarray(
+            [
+                (self.slot_req[i].generated[-1] if self.slot_req[i] else 0)
+                for i in range(self.max_batch)
+            ],
+            dtype=jnp.int32,
+        )
+        pos = jnp.asarray(self.slot_pos, dtype=jnp.int32)
+        logits, self.cache = self._decode_wave(self.cache, toks, pos)
+        self.n_decode_steps += 1
+        if self.greedy:
+            nxt = jnp.argmax(logits, axis=-1)
+        else:
+            self.key, sub = jax.random.split(self.key)
+            nxt = jax.random.categorical(sub, logits)
+        nxt = jax.device_get(nxt)
+        for i in active:
+            self.slot_req[i].generated.append(int(nxt[i]))
+            self.slot_pos[i] += 1
+        self._retire()
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        for _ in range(max_steps):
+            if not self.waiting and all(r is None for r in self.slot_req):
+                break
+            self.step()
+        return self.finished
+
+    def metrics(self) -> dict:
+        """Aggregate serving metrics over finished requests."""
+        done = self.finished
+        toks = sum(len(r.generated) for r in done)
+        ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
+        lats = [r.latency_s for r in done if r.latency_s is not None]
+        span = max((r.finished_at for r in done), default=0.0) - min(
+            (r.submitted_at for r in done), default=0.0
+        )
+        return {
+            "requests": len(done),
+            "tokens": toks,
+            "decode_waves": self.n_decode_steps,
+            "throughput_tok_s": toks / span if span > 0 else 0.0,
+            "mean_ttft_s": sum(ttfts) / len(ttfts) if ttfts else 0.0,
+            "mean_latency_s": sum(lats) / len(lats) if lats else 0.0,
+        }

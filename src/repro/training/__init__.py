@@ -1,0 +1,3 @@
+from .loop import loss_fn, make_train_step, run_train
+
+__all__ = ["loss_fn", "make_train_step", "run_train"]

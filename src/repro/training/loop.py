@@ -1,0 +1,114 @@
+"""Training substrate: loss, train_step factory, and the host loop.
+
+The loss path reuses the exact inference ``forward`` (plus the MTP head for
+DeepSeek-V3), with remat over layer blocks.  AutoChunk can wrap the loss
+function itself (beyond-paper: the paper defers training to future work —
+jaxpr rewriting is transform-agnostic so it composes with jax.grad here).
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import model as M
+from ..optim import adamw_init, adamw_update, linear_warmup_cosine
+
+
+def cross_entropy(logits, labels):
+    """Mean token CE in f32.  logits (B,S,V), labels (B,S) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, window=None, remat: bool = True):
+    logits, aux = M.forward(cfg, params, batch, window=window, remat=remat)
+    labels = batch["labels"]
+    if cfg.family == "vlm":  # text logits follow the patch tokens
+        logits_text = logits[:, cfg.n_frontend_tokens :, :]
+        ce = cross_entropy(logits_text, labels)
+    else:
+        ce = cross_entropy(logits, labels)
+    loss = ce + aux
+    metrics = {"ce": ce, "aux": aux}
+    if cfg.mtp:
+        # h_final recompute-free approximation: reuse logits path is not
+        # possible without hidden states; run the MTP head on embeddings of
+        # the (already computed) forward — we re-embed, which is cheap.
+        h, _ = M.embed_inputs(cfg, params, batch)
+        mtp_lg = M.mtp_logits(cfg, params, batch, h)
+        mtp_ce = cross_entropy(mtp_lg[:, :-1], labels[:, 1:-1])
+        loss = loss + 0.3 * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    lr_fn: Callable,
+    *,
+    window=None,
+    remat: bool = True,
+    weight_decay: float = 0.1,
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, window=window, remat=remat),
+            has_aux=True,
+        )(params)
+        lr = lr_fn(opt_state.step + 1)  # step counts completed updates
+        params, opt_state = adamw_update(
+            params, grads, opt_state, lr, weight_decay=weight_decay
+        )
+        metrics = dict(metrics, lr=lr)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def run_train(
+    cfg: ModelConfig,
+    params,
+    data: Iterator[Dict[str, Any]],
+    *,
+    steps: int,
+    base_lr: float = 3e-4,
+    warmup: int = 20,
+    log_every: int = 10,
+    checkpoint_path: Optional[str] = None,
+    checkpoint_every: int = 0,
+    window=None,
+    log_fn: Callable[[str], None] = print,
+):
+    """Single-host training loop (jit'd step; data from the host pipeline)."""
+    from ..checkpointing import save_checkpoint
+
+    lr_fn = linear_warmup_cosine(base_lr, warmup, steps)
+    step_fn = jax.jit(make_train_step(cfg, lr_fn, window=window))
+    opt_state = adamw_init(params, moment_dtype="float32")
+    history = []
+    t0 = time.time()
+    for step in range(steps):
+        batch = next(data)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": step, **m})
+            log_fn(
+                f"step {step:5d} loss={m['loss']:.4f} ce={m['ce']:.4f}"
+                f" lr={m['lr']:.2e} ({time.time()-t0:.1f}s)"
+            )
+        if checkpoint_path and checkpoint_every and step and step % checkpoint_every == 0:
+            save_checkpoint(checkpoint_path, params, step=step)
+    if checkpoint_path:
+        save_checkpoint(checkpoint_path, params, step=steps)
+    return params, opt_state, history

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Tests run on the single real CPU device (the dry-run sets its own 512-dev
+# placeholder env in a separate process; NEVER set it here).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,153 @@
+"""Integration + property tests for the full AutoChunk pipeline.
+
+The central system invariant (paper Rule 2, output alignment): for any
+traced function, the chunked executable returns *bitwise-meaningful* equal
+outputs (allclose at f32) for any budget, while never increasing estimated
+peak activation memory.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    autochunk,
+    build_autochunk,
+    estimate_memory,
+    search_chunks,
+    trace,
+)
+from repro.core.codegen import build_chunked_fn
+from repro.core.selection import CostHyper, rank_candidates
+
+
+def _mini_block(w, x):
+    q = x @ w["wq"]
+    k = x @ w["wk"]
+    v = x @ w["wv"]
+    logits = jnp.einsum("bsd,btd->bst", q, k) / jnp.sqrt(x.shape[-1])
+    a = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bst,btd->bsd", a, v) @ w["wo"]
+    h = x + o
+    ff = jax.nn.gelu(h @ w["w1"]) @ w["w2"]
+    return h + ff
+
+
+def _mini_weights(d=32, f=64, key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 6)
+    return {
+        "wq": jax.random.normal(ks[0], (d, d)) * 0.1,
+        "wk": jax.random.normal(ks[1], (d, d)) * 0.1,
+        "wv": jax.random.normal(ks[2], (d, d)) * 0.1,
+        "wo": jax.random.normal(ks[3], (d, d)) * 0.1,
+        "w1": jax.random.normal(ks[4], (d, f)) * 0.1,
+        "w2": jax.random.normal(ks[5], (f, d)) * 0.1,
+    }
+
+
+@pytest.mark.parametrize("budget", [0.5, 0.3, 0.1])
+def test_chunked_outputs_match(budget):
+    w = _mini_weights()
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, 64, 32))
+    cf = autochunk(_mini_block, (w, x), memory_budget=budget)
+    y0 = _mini_block(w, x)
+    np.testing.assert_allclose(np.asarray(cf(w, x)), np.asarray(y0), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(jax.jit(cf)(w, x)), np.asarray(y0), atol=1e-5)
+
+
+def test_memory_monotonically_reduced():
+    w = _mini_weights(d=64, f=256)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 128, 64))
+    res = build_autochunk(_mini_block, (w, x), budget_ratio=0.2)
+    assert res.final_peak < res.baseline_peak
+    for r in res.plan:
+        assert r.peak_after < r.peak_before
+
+
+def test_stage_records_consistent():
+    w = _mini_weights(d=64, f=256)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 128, 64))
+    res = build_autochunk(_mini_block, (w, x), budget_ratio=0.3)
+    assert res.plan, "expected at least one chunk stage"
+    for r in res.plan:
+        assert 2 <= r.n_chunks <= r.chunk_extent
+
+
+def test_gradients_through_chunked_fn():
+    w = _mini_weights()
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 64, 32))
+    cf = autochunk(_mini_block, (w, x), memory_budget=0.3)
+
+    def loss_ref(w):
+        return jnp.sum(_mini_block(w, x) ** 2)
+
+    def loss_chunk(w):
+        return jnp.sum(cf(w, x) ** 2)
+
+    g0 = jax.grad(loss_ref)(w)
+    g1 = jax.grad(loss_chunk)(w)
+    for k in w:
+        np.testing.assert_allclose(np.asarray(g0[k]), np.asarray(g1[k]),
+                                   atol=1e-3, rtol=1e-3)
+
+
+def test_abstract_args_no_allocation():
+    w = _mini_weights()
+    specs = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), w)
+    x_spec = jax.ShapeDtypeStruct((2, 64, 32), jnp.float32)
+    res = build_autochunk(_mini_block, (specs, x_spec), budget_ratio=0.3)
+    assert res.baseline_peak > 0
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 64, 32))
+    np.testing.assert_allclose(
+        np.asarray(res.fn(w, x)), np.asarray(_mini_block(w, x)), atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# Property-based: every legal candidate rewrite preserves outputs exactly.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    s=st.sampled_from([16, 24, 32, 48]),
+    d=st.sampled_from([8, 16]),
+)
+def test_property_any_candidate_is_output_preserving(seed, s, d):
+    key = jax.random.PRNGKey(seed)
+    w = {
+        "a": jax.random.normal(key, (d, 2 * d)) * 0.2,
+        "b": jax.random.normal(jax.random.fold_in(key, 1), (2 * d, d)) * 0.2,
+    }
+
+    def f(w, x):
+        h = jnp.tanh(x @ w["a"])
+        y = jax.nn.softmax(h, axis=-1) @ w["b"]
+        return y + x
+
+    x = jax.random.normal(jax.random.fold_in(key, 2), (2, s, d))
+    g, _ = trace(lambda w, x: f(w, x), (w, x))
+    prof = estimate_memory(g)
+    cands = search_chunks(g, prof, window=32)
+    y0 = np.asarray(f(w, x))
+    flat, _ = jax.tree_util.tree_flatten((w, x))
+    checked = 0
+    for cand in cands[:8]:
+        for n in cand.divisors()[:2]:
+            fn = build_chunked_fn(g, cand, n)
+            y1 = np.asarray(fn(*flat)[0])
+            np.testing.assert_allclose(y1, y0, atol=1e-5)
+            checked += 1
+    assert checked > 0 or not cands
+
+
+@settings(max_examples=10, deadline=None)
+@given(budget=st.floats(0.05, 0.9), seed=st.integers(0, 100))
+def test_property_budget_never_increases_peak(budget, seed):
+    w = _mini_weights(key=seed)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 32, 32))
+    res = build_autochunk(_mini_block, (w, x), budget_ratio=float(budget))
+    assert res.final_peak <= res.baseline_peak
+    y0 = _mini_block(w, x)
+    np.testing.assert_allclose(np.asarray(res.fn(w, x)), np.asarray(y0), atol=1e-5)

@@ -1,0 +1,81 @@
+"""Unit tests: backward chunk-flow dimension rules."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.dimflow import FULL, propagate
+from repro.core import trace
+
+
+def _eqns(f, *args):
+    g, _ = trace(f, args, weight_argnums=())
+    return g.eqns
+
+
+def test_elementwise_passthrough():
+    (eqn,) = _eqns(lambda x: jnp.tanh(x), jnp.zeros((4, 8)))
+    assert propagate(eqn, 0, 0) == {0: 0}
+    assert propagate(eqn, 0, 1) == {0: 1}
+
+
+def test_broadcasted_binary():
+    eqns = _eqns(lambda x, y: x / y, jnp.zeros((4, 8, 8)), jnp.zeros((4, 8, 1)))
+    eqn = eqns[-1]
+    assert propagate(eqn, 0, 1) == {0: 1, 1: 1}
+    # dim 2 is broadcast from size-1: y needed whole
+    assert propagate(eqn, 0, 2) == {0: 2, 1: FULL}
+
+
+def test_dot_general_dims():
+    eqns = _eqns(
+        lambda a, b: jnp.einsum("bsd,btd->bst", a, b),
+        jnp.zeros((2, 16, 8)), jnp.zeros((2, 32, 8)),
+    )
+    eqn = [e for e in eqns if e.primitive.name == "dot_general"][0]
+    assert propagate(eqn, 0, 0) == {0: 0, 1: 0}      # batch: both sliced
+    assert propagate(eqn, 0, 1) == {0: 1, 1: FULL}   # lhs free
+    assert propagate(eqn, 0, 2) == {0: FULL, 1: 1}   # rhs free
+
+
+def test_reduce_skips_axes():
+    (eqn,) = _eqns(lambda x: jnp.sum(x, axis=1), jnp.zeros((4, 8, 16)))
+    assert propagate(eqn, 0, 0) == {0: 0}
+    assert propagate(eqn, 0, 1) == {0: 2}
+
+
+def test_reshape_prefix_rule():
+    eqns = _eqns(lambda x: x.reshape(4, 8, 32), jnp.zeros((4, 8, 4, 8)))
+    eqn = [e for e in eqns if e.primitive.name == "reshape"][0]
+    assert propagate(eqn, 0, 0) == {0: 0}
+    assert propagate(eqn, 0, 1) == {0: 1}
+    assert propagate(eqn, 0, 2) is None  # merged dim breaks the flow
+
+
+def test_transpose_perm():
+    eqns = _eqns(lambda x: jnp.transpose(x, (2, 0, 1)), jnp.zeros((2, 3, 4)))
+    eqn = [e for e in eqns if e.primitive.name == "transpose"][0]
+    assert propagate(eqn, 0, 0) == {0: 2}
+    assert propagate(eqn, 0, 1) == {0: 0}
+
+
+def test_concat_breaks_on_axis():
+    eqns = _eqns(
+        lambda a, b: jnp.concatenate([a, b], axis=1),
+        jnp.zeros((2, 4)), jnp.zeros((2, 4)),
+    )
+    eqn = [e for e in eqns if e.primitive.name == "concatenate"][0]
+    assert propagate(eqn, 0, 0) == {0: 0, 1: 0}
+    assert propagate(eqn, 0, 1) is None
+
+
+def test_cumsum_breaks_on_axis():
+    eqns = _eqns(lambda x: jnp.cumsum(x, axis=1), jnp.zeros((4, 8)))
+    eqn = [e for e in eqns if e.primitive.name == "cumsum"][0]
+    assert propagate(eqn, 0, 0) == {0: 0}
+    assert propagate(eqn, 0, 1) is None
+
+
+def test_iota_breaks_and_hoists():
+    eqns = _eqns(lambda x: x + jnp.arange(8, dtype=jnp.float32), jnp.zeros((8,)))
+    iota = [e for e in eqns if e.primitive.name == "iota"][0]
+    assert propagate(iota, 0, 0) is None

@@ -1,0 +1,53 @@
+"""Beyond-paper: non-divisible chunk counts via clamped slices are exact."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import estimate_memory, search_chunks, trace
+from repro.core.codegen import build_chunked_fn
+
+
+def _fn(w, x):
+    h = jnp.tanh(x @ w["a"])
+    return jax.nn.softmax(h, axis=-1) @ w["b"] + x
+
+
+def _setup(s, d=16, seed=0):
+    key = jax.random.PRNGKey(seed)
+    w = {
+        "a": jax.random.normal(key, (d, 2 * d)) * 0.2,
+        "b": jax.random.normal(jax.random.fold_in(key, 1), (2 * d, d)) * 0.2,
+    }
+    x = jax.random.normal(jax.random.fold_in(key, 2), (1, s, d))
+    return w, x
+
+
+@pytest.mark.parametrize("s,n", [(17, 4), (100, 3), (33, 32), (7, 2), (64, 5)])
+def test_non_divisible_chunk_counts_exact(s, n):
+    w, x = _setup(s)
+    g, _ = trace(lambda w, x: _fn(w, x), (w, x))
+    prof = estimate_memory(g)
+    cands = [c for c in search_chunks(g, prof, window=32) if c.chunk_extent == s]
+    assert cands, "expected a seq-extent candidate"
+    fn = build_chunked_fn(g, cands[0], n)
+    flat, _ = jax.tree_util.tree_flatten((w, x))
+    y = np.asarray(fn(*flat)[0])
+    np.testing.assert_allclose(y, np.asarray(_fn(w, x)), atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(s=st.integers(5, 80), n=st.integers(2, 16), seed=st.integers(0, 50))
+def test_property_padded_chunks(s, n, seed):
+    n = min(n, s)
+    w, x = _setup(s, seed=seed)
+    g, _ = trace(lambda w, x: _fn(w, x), (w, x))
+    prof = estimate_memory(g)
+    cands = [c for c in search_chunks(g, prof, window=32) if c.chunk_extent == s]
+    if not cands:
+        return
+    fn = build_chunked_fn(g, cands[0], n)
+    flat, _ = jax.tree_util.tree_flatten((w, x))
+    y = np.asarray(fn(*flat)[0])
+    np.testing.assert_allclose(y, np.asarray(_fn(w, x)), atol=1e-5)

@@ -38,25 +38,59 @@ SUITES = {
 }
 
 
+def smoke(rows) -> None:
+    """CI bitrot canary: one tiny config through the shared harness path
+    (model builder -> estimate -> autochunk -> timed call).  Catches broken
+    imports/APIs in the benchmark stack without measuring performance."""
+    import jax
+
+    from repro.core import build_autochunk
+
+    from .common import gpt_block_model, peak_activation, time_fn
+
+    cfg, params, batch, fwd = gpt_block_model(64, n_layers=1, d=64)
+    baseline = peak_activation(fwd, (params, batch))
+    res = build_autochunk(fwd, (params, batch), budget_ratio=0.5)
+    us = time_fn(res.fn, params, batch, iters=2, warmup=1)
+    ok = res.final_peak <= baseline
+    jax.block_until_ready(res.fn(params, batch))
+    rows.append(("smoke_gpt_s64", us, f"peak_ok={int(ok)}"))
+    if not ok:
+        raise AssertionError(
+            f"smoke: final peak {res.final_peak} > baseline {baseline}"
+        )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", type=str, default=None,
                     help="comma-separated subset of " + ",".join(SUITES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-config harness check for CI (no perf claims)")
     args = ap.parse_args()
-    names = args.only.split(",") if args.only else list(SUITES)
+    if args.smoke:
+        names = ["smoke"]
+        suites = {"smoke": smoke}
+    else:
+        names = args.only.split(",") if args.only else list(SUITES)
+        suites = SUITES
 
     rows = []
+    failed = False
     for name in names:
         t0 = time.time()
         try:
-            SUITES[name](rows)
+            suites[name](rows)
             print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
         except Exception:
             traceback.print_exc()
             rows.append((f"{name}_FAILED", 0.0, "exception"))
+            failed = True
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if args.smoke and failed:
+        sys.exit(1)  # smoke mode is a CI gate; real runs always report
 
 
 if __name__ == "__main__":

@@ -2,9 +2,14 @@
 
 Builds a GPT block stack, compiles it through AutoChunk at a 20% activation
 budget, prints the compilation report, and verifies outputs are unchanged.
+Then recompiles against a plan cache to show the persistence fast path: the
+second compile replays the saved plan instead of re-searching.
 
-  PYTHONPATH=src python examples/quickstart.py
+  python examples/quickstart.py          (after `pip install -e .`)
 """
+import tempfile
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -36,6 +41,22 @@ def main():
     assert np.allclose(np.asarray(y0), np.asarray(y1), atol=2e-4)
     print("outputs identical — activation peak reduced "
           f"{chunked.autochunk_result.reduction*100:.1f}%")
+
+    # --- plan persistence ---------------------------------------------------
+    # Compile once against an on-disk cache, then again: the warm call
+    # replays the stored ChunkPlan (one JSON file per structural key) and
+    # never runs the search/selection passes.
+    with tempfile.TemporaryDirectory() as plan_dir:
+        t0 = time.time()
+        autochunk(model, (params, batch), memory_budget=0.2, cache=plan_dir)
+        cold_s = time.time() - t0
+        t0 = time.time()
+        warm = autochunk(model, (params, batch), memory_budget=0.2, cache=plan_dir)
+        warm_s = time.time() - t0
+        res = warm.autochunk_result
+        assert res.from_cache
+        print(f"\nplan cache: cold compile {cold_s:.2f}s -> warm replay "
+              f"{warm_s:.2f}s ({cold_s / max(warm_s, 1e-9):.0f}x faster)")
 
 
 if __name__ == "__main__":

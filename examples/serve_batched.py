@@ -2,8 +2,15 @@
 with batched requests through the continuous-batching engine, with AutoChunk
 compiled into the decode step.
 
-  PYTHONPATH=src python examples/serve_batched.py
+The autochunk'd engine is constructed twice against a shared plan-cache
+directory — the second construction starts warm (replays the stored chunk
+plan instead of re-running the search), which is the production start-up
+path: pre-build plans with ``python -m repro.tools.precompile`` and point
+every serving process at the same directory.
+
+  python examples/serve_batched.py          (after `pip install -e .`)
 """
+import tempfile
 import time
 
 import jax
@@ -17,12 +24,28 @@ from repro.serving import Request, ServeEngine
 def main():
     cfg = get_config("gpt-paper").reduced().with_(dtype="float32")
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
+    with tempfile.TemporaryDirectory(prefix="autochunk-plans-") as plan_dir:
+        _serve(cfg, params, plan_dir)
 
-    for budget, tag in [(None, "baseline"), (0.4, "autochunk@0.4")]:
+
+def _serve(cfg, params, plan_dir):
+    runs = [
+        (None, "baseline"),
+        (0.4, "autochunk@0.4"),
+        (0.4, "warm restart"),  # same shape+budget: replays the saved plan
+    ]
+    for budget, tag in runs:
+        t_build0 = time.time()
         engine = ServeEngine(
-            cfg, params, max_batch=4, max_len=128, autochunk_budget=budget
+            cfg, params, max_batch=4, max_len=128,
+            autochunk_budget=budget, plan_cache=plan_dir,
         )
+        t_build = time.time() - t_build0
+        if budget is not None:
+            res = engine.autochunk_result
+            print(f"[{tag:>14s}] engine built in {t_build:.2f}s"
+                  f" (plan {'replayed from cache' if res.from_cache else 'searched'})")
+        rng = np.random.default_rng(0)  # identical prompt set every run
         t0 = time.time()
         for i in range(12):
             prompt = rng.integers(0, cfg.vocab_size, 8 + (i % 5)).tolist()

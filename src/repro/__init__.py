@@ -1,0 +1,8 @@
+"""AutoChunk reproduction: automated activation chunking for JAX.
+
+Subpackages: ``core`` (the compiler pipeline + plan cache), ``models`` /
+``configs`` (the evaluated architecture zoo), ``serving`` (continuous
+batching engine), ``kernels``, ``training``, ``launch``, and ``tools``
+(deployment utilities such as ``python -m repro.tools.precompile``).
+"""
+__version__ = "0.1.0"

@@ -1,8 +1,17 @@
 """AutoChunk core: the paper's compiler passes as composable JAX transforms."""
+from . import stats
 from .api import AutoChunkResult, StageRecord, autochunk, build_autochunk
-from .codegen import build_chunked_fn, graph_to_fn
+from .codegen import build_chunked_fn, build_fn_from_plan, graph_to_fn
 from .estimation import MemoryProfile, estimate_memory
 from .graph import Graph, dim_stride, eqn_flops, graph_flops, trace
+from .plan import (
+    ChunkPlan,
+    PlanApplyError,
+    PlanCache,
+    PlanStage,
+    graph_fingerprint,
+    plan_cache_key,
+)
 from .search import ChunkCandidate, search_chunks
 from .selection import CostHyper, chunk_cost, rank_candidates
 
@@ -12,6 +21,7 @@ __all__ = [
     "autochunk",
     "build_autochunk",
     "build_chunked_fn",
+    "build_fn_from_plan",
     "graph_to_fn",
     "MemoryProfile",
     "estimate_memory",
@@ -25,4 +35,11 @@ __all__ = [
     "CostHyper",
     "chunk_cost",
     "rank_candidates",
+    "ChunkPlan",
+    "PlanApplyError",
+    "PlanCache",
+    "PlanStage",
+    "graph_fingerprint",
+    "plan_cache_key",
+    "stats",
 ]

@@ -15,9 +15,11 @@ from typing import Any, Callable, List, Optional, Sequence, Tuple
 import jax
 from jax import tree_util
 
-from .codegen import build_chunked_fn
+from . import stats
+from .codegen import build_chunked_fn, build_fn_from_plan
 from .estimation import MemoryProfile, estimate_memory
 from .graph import Graph, trace
+from .plan import ChunkPlan, PlanApplyError, PlanStage, as_plan_cache, plan_cache_key
 from .search import search_chunks
 from .selection import CostHyper, rank_candidates
 
@@ -48,6 +50,24 @@ class AutoChunkResult:
     io_bytes: int
     weight_bytes: int
     elapsed_s: float = 0.0
+    plan_stages: List[PlanStage] = field(default_factory=list)
+    from_cache: bool = False
+    cache_key: Optional[str] = None
+
+    def to_chunk_plan(self) -> ChunkPlan:
+        """Detach the compilation into a serializable :class:`ChunkPlan`."""
+        return ChunkPlan(
+            cache_key=self.cache_key or "",
+            budget_bytes=self.budget_bytes,
+            baseline_peak=self.baseline_peak,
+            final_peak=self.final_peak,
+            stages=list(self.plan_stages),
+            meta={
+                "io_bytes": self.io_bytes,
+                "weight_bytes": self.weight_bytes,
+                "compile_s": round(self.elapsed_s, 3),
+            },
+        )
 
     @property
     def reduction(self) -> float:
@@ -64,7 +84,8 @@ class AutoChunkResult:
             f"  ({self.reduction*100:.1f}% reduction)",
             f"  io bytes: {self.io_bytes/2**20:.2f} MiB,"
             f" weights: {self.weight_bytes/2**20:.2f} MiB",
-            f"  compile time: {self.elapsed_s:.2f}s, stages: {len(self.plan)}",
+            f"  compile time: {self.elapsed_s:.2f}s, stages: {len(self.plan)}"
+            + (" [from cache]" if self.from_cache else ""),
         ]
         for r in self.plan:
             lines.append(
@@ -100,6 +121,45 @@ def _flatten_spec(example_args: Sequence[Any], weight_argnums: Sequence[int]):
     return flat, in_tree, weight_flat
 
 
+def _package_result(
+    *,
+    fn: Callable,
+    out_tree_box: List[Any],
+    plan: List[StageRecord],
+    plan_stages: List[PlanStage],
+    baseline_peak: int,
+    final_peak: int,
+    budget_bytes: int,
+    io_bytes: int,
+    weight_bytes: int,
+    elapsed_s: float,
+    from_cache: bool = False,
+    cache_key: Optional[str] = None,
+) -> AutoChunkResult:
+    """Wrap a flat callable back into the original pytree signature."""
+    final_flat = fn
+
+    def wrapped(*args):
+        leaves, _ = tree_util.tree_flatten(tuple(args))
+        out_leaves = final_flat(*leaves)
+        return tree_util.tree_unflatten(out_tree_box[0], list(out_leaves))
+
+    return AutoChunkResult(
+        fn=wrapped,
+        flat_fn=final_flat,
+        plan=plan,
+        baseline_peak=baseline_peak,
+        final_peak=final_peak,
+        budget_bytes=budget_bytes,
+        io_bytes=io_bytes,
+        weight_bytes=weight_bytes,
+        elapsed_s=elapsed_s,
+        plan_stages=plan_stages,
+        from_cache=from_cache,
+        cache_key=cache_key,
+    )
+
+
 def build_autochunk(
     fn: Callable,
     example_args: Sequence[Any],
@@ -116,6 +176,7 @@ def build_autochunk(
     dim_blocklist: Sequence[int] = (),
     anneal: int = 2,
     verbose: bool = False,
+    cache=None,
 ) -> AutoChunkResult:
     """Run the full AutoChunk pipeline on ``fn``.
 
@@ -123,10 +184,17 @@ def build_autochunk(
     is materialized.  ``budget_ratio`` is relative to the baseline peak
     intermediate-activation memory (the paper's 0.2/0.4/0.5 settings);
     ``budget_bytes`` is absolute.  Exactly one must be given.
+
+    ``cache`` is a :class:`~repro.core.plan.PlanCache` (or a directory path
+    for an on-disk cache).  On a structural hit the saved plan is replayed
+    directly — one re-trace per stage plus one verification re-trace, never
+    a search or selection pass.  Misses (and replay failures) fall through
+    to the full pipeline and store the resulting plan.
     """
     if (budget_ratio is None) == (budget_bytes is None):
         raise ValueError("give exactly one of budget_ratio / budget_bytes")
     hyper = hyper or CostHyper()
+    cache = as_plan_cache(cache)
     t0 = time.time()
 
     flat_args, in_tree, weight_flat = _flatten_spec(example_args, weight_argnums)
@@ -141,11 +209,72 @@ def build_autochunk(
 
     cur: Callable = flat_fn
     plan: List[StageRecord] = []
+    plan_stages: List[PlanStage] = []
     g, _ = trace(cur, flat_args, weight_argnums=weight_flat)
     prof = estimate_memory(g)
     baseline_peak = prof.peak_bytes
     if budget_bytes is None:
         budget_bytes = int(baseline_peak * budget_ratio)
+
+    ckey: Optional[str] = None
+    if cache is not None:
+        ckey = plan_cache_key(
+            g,
+            budget_bytes,
+            hyper,
+            {
+                "max_stages": max_stages,
+                "beam": beam,
+                "window": window,
+                "min_gain": min_gain,
+                "allow_hoist": allow_hoist,
+                "dim_blocklist": sorted(dim_blocklist),
+                "anneal": anneal,
+            },
+        )
+        saved = cache.get(ckey)
+        if saved is not None:
+            stats.bump("plan_cache_hits")
+            try:
+                final_flat, g2, prof2 = build_fn_from_plan(
+                    flat_fn,
+                    flat_args,
+                    saved,
+                    weight_argnums=weight_flat,
+                    baseline_graph=g,
+                )
+            except PlanApplyError:
+                stats.bump("plan_replay_failures")
+            else:
+                return _package_result(
+                    fn=final_flat,
+                    out_tree_box=out_tree_box,
+                    plan=[
+                        StageRecord(
+                            stage=i,
+                            region=(st.s, st.e),
+                            n_chunks=st.n_chunks,
+                            chunk_extent=st.chunk_extent,
+                            n_loop_eqns=len(st.in_loop),
+                            n_hoisted=len(st.hoisted),
+                            cost=st.cost,
+                            peak_before=st.peak_before,
+                            peak_after=st.peak_after,
+                        )
+                        for i, st in enumerate(saved.stages)
+                    ],
+                    plan_stages=list(saved.stages),
+                    baseline_peak=baseline_peak,
+                    final_peak=prof2.peak_bytes,
+                    budget_bytes=budget_bytes,
+                    io_bytes=prof2.io_bytes,
+                    weight_bytes=prof2.weight_bytes,
+                    elapsed_s=time.time() - t0,
+                    from_cache=True,
+                    cache_key=ckey,
+                )
+        else:
+            stats.bump("plan_cache_misses")
 
     for stage in range(max_stages):
         if prof.peak_bytes <= budget_bytes:
@@ -200,13 +329,22 @@ def build_autochunk(
                 peak_after=prof2.peak_bytes,
             )
         )
+        plan_stages.append(
+            PlanStage.from_candidate(
+                g, cand, n, cost=cost,
+                peak_before=prof.peak_bytes, peak_after=prof2.peak_bytes,
+            )
+        )
         cur, g, prof = new_fn, g2, prof2
+
+    final_peak = prof.peak_bytes
+    io_bytes, weight_bytes = prof.io_bytes, prof.weight_bytes
 
     # Budget annealing: the analytic per-stage estimate is optimistic for
     # loose budgets (region boundaries that "meet" analytically can verify
     # over).  When the target is missed, retry the whole pipeline against a
     # tighter internal budget and keep whichever plan verifies lower.
-    if prof.peak_bytes > budget_bytes and anneal > 0 and plan:
+    if final_peak > budget_bytes and anneal > 0 and plan:
         retry = build_autochunk(
             fn, example_args,
             budget_bytes=max(budget_bytes // 2, 1),
@@ -215,33 +353,28 @@ def build_autochunk(
             min_gain=min_gain, allow_hoist=allow_hoist,
             dim_blocklist=dim_blocklist, anneal=anneal - 1, verbose=verbose,
         )
-        if retry.final_peak < prof.peak_bytes:
-            return AutoChunkResult(
-                fn=retry.fn, flat_fn=retry.flat_fn, plan=retry.plan,
-                baseline_peak=baseline_peak, final_peak=retry.final_peak,
-                budget_bytes=budget_bytes, io_bytes=retry.io_bytes,
-                weight_bytes=retry.weight_bytes,
-                elapsed_s=time.time() - t0,
-            )
+        if retry.final_peak < final_peak:
+            cur = retry.flat_fn
+            plan, plan_stages = retry.plan, retry.plan_stages
+            final_peak = retry.final_peak
+            io_bytes, weight_bytes = retry.io_bytes, retry.weight_bytes
 
-    final_flat = cur
-
-    def wrapped(*args):
-        leaves, tree = tree_util.tree_flatten(tuple(args))
-        out_leaves = final_flat(*leaves)
-        return tree_util.tree_unflatten(out_tree_box[0], list(out_leaves))
-
-    return AutoChunkResult(
-        fn=wrapped,
-        flat_fn=final_flat,
+    result = _package_result(
+        fn=cur,
+        out_tree_box=out_tree_box,
         plan=plan,
+        plan_stages=plan_stages,
         baseline_peak=baseline_peak,
-        final_peak=prof.peak_bytes,
+        final_peak=final_peak,
         budget_bytes=budget_bytes,
-        io_bytes=prof.io_bytes,
-        weight_bytes=prof.weight_bytes,
+        io_bytes=io_bytes,
+        weight_bytes=weight_bytes,
         elapsed_s=time.time() - t0,
+        cache_key=ckey,
     )
+    if cache is not None and ckey is not None:
+        cache.put(ckey, result.to_chunk_plan())
+    return result
 
 
 def autochunk(

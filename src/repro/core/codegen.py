@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from . import stats
 from .graph import Graph, Literal, Var, is_var
 from .search import ChunkCandidate
 
@@ -106,6 +107,7 @@ def build_chunked_fn(
     corresponding ``dynamic_update_slice`` re-writes it; outputs stay exact
     because chunk outputs are pure functions of their input slices.
     """
+    stats.bump("codegen_calls")
     ext = cand.chunk_extent
     n = int(n_chunks)
     c = -(-ext // n)             # ceil: per-chunk slice extent
@@ -167,6 +169,59 @@ def build_chunked_fn(
         return tuple(env[ov] if is_var(ov) else ov.val for ov in outvars)
 
     return fn
+
+
+def build_fn_from_plan(
+    flat_fn: Callable,
+    flat_args: Sequence[Any],
+    plan,
+    *,
+    weight_argnums: Sequence[int] = (),
+    baseline_graph: Graph = None,
+):
+    """Fast path: apply a saved :class:`~repro.core.plan.ChunkPlan` directly.
+
+    Replays the plan's stages in order — each stage re-traces the current
+    callable (deterministic, so eqn indices and positional var names line
+    up with the graph the stage was recorded on) and rebuilds the chunked
+    loop with :func:`build_chunked_fn`.  No search or selection pass runs.
+    A final re-trace + estimation verifies legality; any mismatch raises
+    ``PlanApplyError`` so the caller can fall back to a cold compile.
+
+    Returns ``(final_flat_fn, final_graph, final_profile)``.
+    """
+    from .estimation import estimate_memory
+    from .graph import trace
+    from .plan import PlanApplyError
+
+    stats.bump("plan_replays")
+    cur = flat_fn
+    g = baseline_graph
+    for stage_i, st in enumerate(plan.stages):
+        if g is None:
+            try:
+                g, _ = trace(cur, flat_args, weight_argnums=weight_argnums)
+            except Exception as e:
+                raise PlanApplyError(
+                    f"re-trace before plan stage {stage_i} failed: {e!r}"
+                ) from e
+        try:
+            cand = st.to_candidate(g)
+            cur = build_chunked_fn(g, cand, st.n_chunks)
+        except PlanApplyError:
+            raise
+        except Exception as e:
+            raise PlanApplyError(
+                f"applying plan stage {stage_i} failed: {e!r}"
+            ) from e
+        g = None  # next stage re-traces the rewritten callable
+
+    try:
+        g, _ = trace(cur, flat_args, weight_argnums=weight_argnums)
+        prof = estimate_memory(g)
+    except Exception as e:
+        raise PlanApplyError(f"verification re-trace failed: {e!r}") from e
+    return cur, g, prof
 
 
 def graph_to_fn(g: Graph) -> Callable[..., Tuple[Any, ...]]:

@@ -22,6 +22,9 @@ from jax.extend import core as jex_core
 from .graph import Graph, Var, atom_bytes, is_var
 
 
+from . import stats
+
+
 @dataclass
 class MemoryProfile:
     """Result of the estimation pass."""
@@ -93,6 +96,7 @@ def _jaxpr_peak(jaxpr) -> int:
 
 def estimate_memory(g: Graph) -> MemoryProfile:
     """Run the estimation pass over a :class:`Graph`."""
+    stats.bump("estimate_calls")
     n = len(g.eqns)
     inputs = set(g.invars) | set(g.consts)
     per_eqn: List[int] = []

@@ -35,6 +35,31 @@ _CALL_PRIM_NAMES = {
 }
 
 
+def fresh_var(aval) -> Var:
+    """Make a new Var for ``aval`` across jax versions.
+
+    jax<=0.4.35 exposes ``Var(aval)``; newer releases take ``Var(suffix,
+    aval)``.  Probe once at import time instead of try/except per call.
+    """
+    return Var(*_VAR_PREFIX_ARGS, aval)
+
+
+def _probe_var_prefix_args():
+    # derive a real aval from a trivial trace rather than naming
+    # jax.core.ShapedArray (deprecated alias, removed in newer jax)
+    aval = jax.make_jaxpr(lambda x: x)(0.0).jaxpr.outvars[0].aval
+    for prefix in ((), ("",)):
+        try:
+            Var(*prefix, aval)
+            return prefix
+        except TypeError:
+            continue
+    raise RuntimeError("unsupported jax.extend.core.Var signature")
+
+
+_VAR_PREFIX_ARGS = _probe_var_prefix_args()
+
+
 def aval_bytes(aval) -> int:
     """Bytes occupied by a value of this abstract type."""
     try:
@@ -97,7 +122,7 @@ def _flatten_jaxpr(jaxpr, consts, const_env: Dict[Var, Any], arg_atoms):
         new_invars = [resolve(a) for a in eqn.invars]
         new_outvars = []
         for v in eqn.outvars:
-            nv = Var(v.aval)
+            nv = fresh_var(v.aval)
             sub[v] = nv
             new_outvars.append(nv)
         out.append(eqn.replace(invars=new_invars, outvars=new_outvars))
@@ -160,6 +185,9 @@ def trace(
     Returns (graph, out_tree).  ``example_args`` may be ShapeDtypeStructs —
     nothing is materialized.
     """
+    from . import stats
+
+    stats.bump("trace_calls")
     closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*example_args)
     out_tree = tree_util.tree_structure(out_shape)
     jaxpr = closed.jaxpr

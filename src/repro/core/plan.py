@@ -1,0 +1,419 @@
+"""Chunk-plan persistence: serializable plans, structural cache keys, PlanCache.
+
+AutoChunk's estimate -> search -> select -> verify loop costs seconds to
+minutes per (function, shapes, budget) tuple — compile latency a serving
+engine cannot afford on every process start or slot reconfiguration.  This
+module makes the *result* of that loop a first-class artifact:
+
+* :class:`ChunkPlan` — everything needed to re-apply a finished compilation
+  to a fresh trace of the same function: per-stage region ``[s, e]``, the
+  var -> chunk-dim assignment, chunk extents/counts, and the hoisted/in-loop
+  equation partition.  Vars are named positionally (``in:i`` / ``const:i`` /
+  ``eqn:i:j``), which is stable because jaxpr tracing is deterministic for a
+  fixed function and fixed input avals.
+* :func:`plan_cache_key` — a structural sha256 over the flattened jaxpr
+  (primitive names, params, shapes, dtypes, topology) plus the budget and
+  the cost hyper-parameters.  Any change that could alter the search result
+  changes the key; plans can never be silently applied to the wrong graph.
+* :class:`PlanCache` — in-memory map with an optional on-disk directory
+  (one ``<key>.json`` per plan, written atomically), shared by the
+  ``autochunk(..., cache=...)`` API, the serving engine, and the
+  ``repro.tools.precompile`` CLI.
+
+Replaying a plan (see ``codegen.build_fn_from_plan``) re-traces once per
+stage to rebuild the graph the stage's indices refer to and once more to
+verify the final peak — no search or selection pass ever runs on a warm hit.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+from dataclasses import asdict, dataclass, field
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+from jax.extend import core as jex_core
+
+from .graph import Graph, Var, is_var
+from .search import ChunkCandidate
+
+PLAN_FORMAT_VERSION = 1
+
+
+class PlanApplyError(RuntimeError):
+    """A saved plan does not fit the graph it is being applied to."""
+
+
+# ---------------------------------------------------------------------------
+# Positional var naming
+# ---------------------------------------------------------------------------
+
+def var_keys(g: Graph) -> Dict[Var, str]:
+    """Stable positional name for every var a plan may reference."""
+    keys: Dict[Var, str] = {}
+    for i, v in enumerate(g.invars):
+        keys[v] = f"in:{i}"
+    for i, v in enumerate(g.consts):
+        keys.setdefault(v, f"const:{i}")
+    for ei, eqn in enumerate(g.eqns):
+        for oi, ov in enumerate(eqn.outvars):
+            if is_var(ov):
+                keys.setdefault(ov, f"eqn:{ei}:{oi}")
+    return keys
+
+
+def resolve_var_keys(g: Graph) -> Dict[str, Var]:
+    return {k: v for v, k in var_keys(g).items()}
+
+
+# ---------------------------------------------------------------------------
+# Serializable plan
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PlanStage:
+    """One applied chunk stage, in terms of the graph it was found on."""
+
+    s: int
+    e: int
+    n_chunks: int
+    chunk_extent: int
+    var_dim: Dict[str, int]
+    in_loop: List[int]
+    hoisted: List[int]
+    loop_out: List[str]
+    full_out: List[str]
+    sliced_in: List[Tuple[str, int]]
+    full_in: List[str]
+    cost: float = 0.0
+    peak_before: int = 0
+    peak_after: int = 0
+
+    @classmethod
+    def from_candidate(
+        cls,
+        g: Graph,
+        cand: ChunkCandidate,
+        n_chunks: int,
+        *,
+        cost: float = 0.0,
+        peak_before: int = 0,
+        peak_after: int = 0,
+    ) -> "PlanStage":
+        keys = var_keys(g)
+        return cls(
+            s=cand.s,
+            e=cand.e,
+            n_chunks=int(n_chunks),
+            chunk_extent=cand.chunk_extent,
+            var_dim={keys[v]: d for v, d in cand.var_dim.items()},
+            in_loop=list(cand.in_loop),
+            hoisted=list(cand.hoisted),
+            loop_out=[keys[v] for v in cand.loop_out],
+            full_out=[keys[v] for v in cand.full_out],
+            sliced_in=[(keys[v], d) for v, d in cand.sliced_in],
+            full_in=[keys[v] for v in cand.full_in],
+            cost=cost,
+            peak_before=peak_before,
+            peak_after=peak_after,
+        )
+
+    def to_candidate(self, g: Graph) -> ChunkCandidate:
+        """Rebind this stage's positional names to ``g``'s vars.
+
+        Raises :class:`PlanApplyError` when any name or equation index does
+        not resolve — the caller falls back to a cold compile.
+        """
+        rev = resolve_var_keys(g)
+
+        def lookup(key: str) -> Var:
+            v = rev.get(key)
+            if v is None:
+                raise PlanApplyError(f"plan references unknown var {key!r}")
+            return v
+
+        n = len(g.eqns)
+        for i in self.in_loop + self.hoisted + [self.s, self.e]:
+            if not 0 <= i < n:
+                raise PlanApplyError(
+                    f"plan eqn index {i} out of range for graph of {n} eqns"
+                )
+        cand = ChunkCandidate(
+            s=self.s,
+            e=self.e,
+            var_dim={lookup(k): d for k, d in self.var_dim.items()},
+            in_loop=list(self.in_loop),
+            hoisted=list(self.hoisted),
+            loop_out=[lookup(k) for k in self.loop_out],
+            full_out=[lookup(k) for k in self.full_out],
+            sliced_in=[(lookup(k), d) for k, d in self.sliced_in],
+            full_in=[lookup(k) for k in self.full_in],
+            chunk_extent=self.chunk_extent,
+        )
+        for v, d in cand.var_dim.items():
+            shape = v.aval.shape
+            if d >= len(shape):
+                raise PlanApplyError(
+                    f"plan assigns dim {d} to a rank-{len(shape)} var"
+                )
+        for v, d in cand.sliced_in:
+            if v.aval.shape[d] != cand.chunk_extent:
+                raise PlanApplyError(
+                    "plan chunk extent no longer matches the traced shapes"
+                )
+        return cand
+
+
+@dataclass
+class ChunkPlan:
+    """A finished AutoChunk compilation, detached from any live trace."""
+
+    cache_key: str
+    budget_bytes: int
+    baseline_peak: int
+    final_peak: int
+    stages: List[PlanStage] = field(default_factory=list)
+    meta: Dict[str, Any] = field(default_factory=dict)
+    version: int = PLAN_FORMAT_VERSION
+
+    # -- JSON round-trip ----------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+    def to_json(self, indent: Optional[int] = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ChunkPlan":
+        if d.get("version", 1) > PLAN_FORMAT_VERSION:
+            raise PlanApplyError(
+                f"plan format v{d['version']} is newer than supported"
+                f" v{PLAN_FORMAT_VERSION}"
+            )
+        stages = [
+            PlanStage(
+                **{
+                    **st,
+                    "sliced_in": [tuple(p) for p in st["sliced_in"]],
+                }
+            )
+            for st in d.get("stages", [])
+        ]
+        return cls(
+            cache_key=d["cache_key"],
+            budget_bytes=int(d["budget_bytes"]),
+            baseline_peak=int(d["baseline_peak"]),
+            final_peak=int(d["final_peak"]),
+            stages=stages,
+            meta=dict(d.get("meta", {})),
+            version=int(d.get("version", 1)),
+        )
+
+    @classmethod
+    def from_json(cls, s: str) -> "ChunkPlan":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path) -> None:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        _atomic_write(path, self.to_json())
+
+    @classmethod
+    def load(cls, path) -> "ChunkPlan":
+        return cls.from_json(Path(path).read_text())
+
+
+# ---------------------------------------------------------------------------
+# Structural cache key
+# ---------------------------------------------------------------------------
+
+def _canon(obj) -> Any:
+    """Canonicalize an eqn param (or nested value) into JSON-able data."""
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if isinstance(obj, (tuple, list)):
+        return [_canon(x) for x in obj]
+    if isinstance(obj, dict):
+        return {str(k): _canon(obj[k]) for k in sorted(obj, key=str)}
+    if isinstance(obj, (jex_core.ClosedJaxpr,)) or hasattr(obj, "eqns"):
+        # nested jaxprs (scan/while/cond bodies): the pretty-printer is
+        # deterministic for a fixed structure and includes avals
+        return ["jaxpr", str(obj)]
+    if hasattr(obj, "shape") and hasattr(obj, "dtype"):
+        return ["array", list(obj.shape), str(obj.dtype)]
+    if callable(obj):
+        return ["fn", getattr(obj, "__qualname__", getattr(obj, "__name__", "?"))]
+    return ["repr", repr(obj)]
+
+
+def _atom_sig(atom, ids: Dict[Var, int]) -> Any:
+    if is_var(atom):
+        return ["v", ids.setdefault(atom, len(ids))]
+    val = getattr(atom, "val", None)
+    aval = atom.aval
+    sig = ["lit", list(aval.shape), str(aval.dtype)]
+    if getattr(val, "size", 2) == 1 or isinstance(val, (int, float, bool)):
+        try:
+            sig.append(repr(val.item() if hasattr(val, "item") else val))
+        except Exception:
+            pass
+    return sig
+
+
+def graph_fingerprint(g: Graph) -> str:
+    """Deterministic structural hash of a flattened graph.
+
+    Covers topology (var def/use indices), primitive names and params,
+    every aval's shape+dtype, and which inputs are weights — everything the
+    search/selection passes can observe.
+    """
+    ids: Dict[Var, int] = {}
+    doc: List[Any] = []
+    for v in g.invars:
+        doc.append(
+            ["in", list(v.aval.shape), str(v.aval.dtype), v in g.weight_invars]
+        )
+        ids.setdefault(v, len(ids))
+    for v in g.consts:
+        doc.append(["const", list(v.aval.shape), str(v.aval.dtype)])
+        ids.setdefault(v, len(ids))
+    for eqn in g.eqns:
+        doc.append(
+            [
+                eqn.primitive.name,
+                [_atom_sig(iv, ids) for iv in eqn.invars],
+                [
+                    ["v", ids.setdefault(ov, len(ids)),
+                     list(ov.aval.shape), str(ov.aval.dtype)]
+                    if is_var(ov)
+                    else ["drop"]
+                    for ov in eqn.outvars
+                ],
+                _canon(dict(eqn.params)),
+            ]
+        )
+    doc.append(["out", [_atom_sig(ov, ids) for ov in g.outvars]])
+    blob = json.dumps(doc, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def plan_cache_key(
+    g: Graph,
+    budget_bytes: int,
+    hyper=None,
+    knobs: Optional[Dict[str, Any]] = None,
+) -> str:
+    """Cache key: graph structure + budget + cost hypers + search knobs."""
+    doc = {
+        "graph": graph_fingerprint(g),
+        "budget_bytes": int(budget_bytes),
+        "hyper": _canon(asdict(hyper)) if hyper is not None else None,
+        "knobs": _canon(dict(knobs or {})),
+        "format": PLAN_FORMAT_VERSION,
+    }
+    blob = json.dumps(doc, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Plan cache
+# ---------------------------------------------------------------------------
+
+def _atomic_write(path: Path, text: str) -> None:
+    fd, tmp = tempfile.mkstemp(
+        dir=str(path.parent), prefix=path.name, suffix=".tmp"
+    )
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+class PlanCache:
+    """Two-level plan store: process-local dict + optional directory.
+
+    The disk layout is one ``<cache_key>.json`` per plan, so caches can be
+    pre-built by ``repro.tools.precompile``, shipped with a deployment, and
+    shared between processes (writes are atomic renames).
+    """
+
+    def __init__(self, path: Optional[Any] = None):
+        self._mem: Dict[str, ChunkPlan] = {}
+        self.path: Optional[Path] = Path(path) if path is not None else None
+        if self.path is not None:
+            self.path.mkdir(parents=True, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+
+    # ------------------------------------------------------------------
+    def _disk_path(self, key: str) -> Optional[Path]:
+        if self.path is None:
+            return None
+        return self.path / f"{key}.json"
+
+    def get(self, key: str) -> Optional[ChunkPlan]:
+        plan = self._mem.get(key)
+        if plan is None:
+            p = self._disk_path(key)
+            if p is not None and p.exists():
+                try:
+                    plan = ChunkPlan.load(p)
+                except (OSError, ValueError, KeyError, TypeError, PlanApplyError):
+                    # unreadable/foreign-format plan file -> treat as a miss
+                    # (the cold compile rewrites it)
+                    plan = None
+                if plan is not None:
+                    self._mem[key] = plan
+        if plan is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return plan
+
+    def put(self, key: str, plan: ChunkPlan) -> None:
+        self._mem[key] = plan
+        p = self._disk_path(key)
+        if p is not None:
+            plan.save(p)
+
+    def __contains__(self, key: str) -> bool:
+        if key in self._mem:
+            return True
+        p = self._disk_path(key)
+        return p is not None and p.exists()
+
+    def __len__(self) -> int:
+        return len(self.keys())
+
+    def keys(self) -> List[str]:
+        ks = set(self._mem)
+        if self.path is not None:
+            ks.update(p.stem for p in self.path.glob("*.json"))
+        return sorted(ks)
+
+    def clear(self, *, disk: bool = False) -> None:
+        self._mem.clear()
+        if disk and self.path is not None:
+            for p in self.path.glob("*.json"):
+                try:
+                    p.unlink()
+                except OSError:
+                    pass
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses, "entries": len(self)}
+
+
+def as_plan_cache(cache) -> Optional[PlanCache]:
+    """Accept a PlanCache, a directory path, or None."""
+    if cache is None or isinstance(cache, PlanCache):
+        return cache
+    return PlanCache(cache)

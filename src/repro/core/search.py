@@ -326,6 +326,9 @@ def search_chunks(
     tensors (crossing outputs + boundary-live values) already exceed the
     current peak — such a chunk can never reduce memory.
     """
+    from . import stats
+
+    stats.bump("search_calls")
     p = prof.peak_eqn if peak_eqn is None else peak_eqn
     n = len(g.eqns)
     lo = max(0, p - window)

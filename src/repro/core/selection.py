@@ -150,6 +150,9 @@ def rank_candidates(
     hyper: CostHyper,
 ) -> List[Tuple[ChunkCandidate, int, int, float]]:
     """Score every candidate; return [(cand, n, est_peak, cost)] best-first."""
+    from . import stats
+
+    stats.bump("rank_calls")
     if not cands:
         return []
     total_flops = graph_flops(g)

@@ -1,0 +1,40 @@
+"""Pipeline stage counters: observable evidence of which passes ran.
+
+The plan cache's contract is that a warm hit skips the search and selection
+passes entirely; these counters make that contract testable (and expose
+cache efficacy to the serving layer) without timing-based flakiness.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+_COUNTERS: Dict[str, int] = {
+    "trace_calls": 0,
+    "estimate_calls": 0,
+    "search_calls": 0,
+    "rank_calls": 0,
+    "codegen_calls": 0,
+    "plan_cache_hits": 0,
+    "plan_cache_misses": 0,
+    "plan_replays": 0,
+    "plan_replay_failures": 0,
+}
+
+
+def bump(name: str, by: int = 1) -> None:
+    _COUNTERS[name] = _COUNTERS.get(name, 0) + by
+
+
+def snapshot() -> Dict[str, int]:
+    """Copy of all counters (safe to diff against a later snapshot)."""
+    return dict(_COUNTERS)
+
+
+def reset() -> None:
+    for k in _COUNTERS:
+        _COUNTERS[k] = 0
+
+
+def delta(before: Dict[str, int]) -> Dict[str, int]:
+    """Counter increments since ``before`` (a prior :func:`snapshot`)."""
+    return {k: _COUNTERS.get(k, 0) - before.get(k, 0) for k in _COUNTERS}

@@ -9,6 +9,14 @@ decode wave then advances all active slots together.
 AutoChunk integration: pass ``autochunk_budget`` to compile the per-slot
 decode step under a memory budget — the engine is the paper's serving
 use-case (long-sequence inference on limited-memory hardware).
+
+Plan caching: compilation is the expensive part of that integration, so the
+engine warms a :class:`~repro.core.plan.PlanCache` at construction (pass
+``plan_cache=`` a shared cache object or an on-disk directory, e.g. one
+pre-built by ``python -m repro.tools.precompile``).  ``reconfigure()``
+rebuilds the slot layout for a new (max_batch, max_len) and reuses any
+previously compiled plan for that shape — a warm reconfiguration skips the
+search/selection passes entirely.
 """
 from __future__ import annotations
 
@@ -57,27 +65,50 @@ class ServeEngine:
         max_batch: int = 4,
         max_len: int = 256,
         autochunk_budget: Optional[float] = None,
+        plan_cache=None,
         greedy: bool = True,
         seed: int = 0,
     ):
+        from ..core.plan import PlanCache, as_plan_cache
+
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.greedy = greedy
         self.key = jax.random.PRNGKey(seed)
+        self.autochunk_budget = autochunk_budget
+        # accept a PlanCache, a directory path, or None; with a budget set,
+        # an in-memory cache is always created so that reconfigure() back to
+        # a previously seen shape replays the stored plan instead of
+        # re-searching
+        self.plan_cache = as_plan_cache(plan_cache)
+        if self.plan_cache is None and autochunk_budget is not None:
+            self.plan_cache = PlanCache()
+        self.autochunk_result = None
 
-        # each slot keeps its own B=1 cache; slots are stacked on a fresh
-        # leading axis that the decode wave vmaps over
-        cache1 = M.init_cache(cfg, 1, max_len)
-        self.cache = jax.tree.map(
-            lambda x: jnp.broadcast_to(x[None], (max_batch,) + x.shape).copy(), cache1
-        )
-        self.slot_req: List[Optional[Request]] = [None] * max_batch
-        self.slot_pos = [0] * max_batch
         self.waiting: List[Request] = []
         self.finished: List[Request] = []
         self.n_decode_steps = 0
+        self._init_slots()
+        self._compile()
+
+    # ------------------------------------------------------------------
+    def _init_slots(self):
+        # each slot keeps its own B=1 cache; slots are stacked on a fresh
+        # leading axis that the decode wave vmaps over
+        cache1 = M.init_cache(self.cfg, 1, self.max_len)
+        self.cache = jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                x[None], (self.max_batch,) + x.shape
+            ).copy(),
+            cache1,
+        )
+        self.slot_req: List[Optional[Request]] = [None] * self.max_batch
+        self.slot_pos = [0] * self.max_batch
+
+    def _compile(self):
+        cfg, max_batch, max_len = self.cfg, self.max_batch, self.max_len
 
         def _row_decode(cache_row, tok, pos):
             logits, nc = M.decode_step(
@@ -86,7 +117,7 @@ class ServeEngine:
             return logits[0, 0], nc
 
         decode_wave = jax.vmap(_row_decode)
-        if autochunk_budget is not None:
+        if self.autochunk_budget is not None:
             from ..core import autochunk
 
             tok_spec = jax.ShapeDtypeStruct((max_batch,), jnp.int32)
@@ -97,13 +128,37 @@ class ServeEngine:
             decode_wave = autochunk(
                 decode_wave,
                 (cache_spec, tok_spec, pos_spec),
-                memory_budget=autochunk_budget,
+                memory_budget=self.autochunk_budget,
                 weight_argnums=(),
+                cache=self.plan_cache,
             )
+            self.autochunk_result = decode_wave.autochunk_result
         self._decode_wave = jax.jit(decode_wave)
         self._prefill = jax.jit(
-            lambda batch: M.prefill(cfg, self.params, batch, max_len)
+            lambda batch: M.prefill(self.cfg, self.params, batch, self.max_len)
         )
+
+    def reconfigure(
+        self,
+        *,
+        max_batch: Optional[int] = None,
+        max_len: Optional[int] = None,
+    ) -> None:
+        """Re-shape the slot layout (and recompile the decode wave).
+
+        Only legal while no requests are in flight.  With a warm plan cache
+        the recompile replays the stored chunk plan for the new shape if one
+        exists (e.g. pre-built by ``repro.tools.precompile`` or seen by an
+        earlier configuration of this engine) instead of re-searching.
+        """
+        if any(r is not None for r in self.slot_req) or self.waiting:
+            raise RuntimeError("reconfigure() requires an idle engine")
+        if max_batch is not None:
+            self.max_batch = max_batch
+        if max_len is not None:
+            self.max_len = max_len
+        self._init_slots()
+        self._compile()
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -183,7 +238,7 @@ class ServeEngine:
         span = max((r.finished_at for r in done), default=0.0) - min(
             (r.submitted_at for r in done), default=0.0
         )
-        return {
+        out = {
             "requests": len(done),
             "tokens": toks,
             "decode_waves": self.n_decode_steps,
@@ -191,3 +246,6 @@ class ServeEngine:
             "mean_ttft_s": sum(ttfts) / len(ttfts) if ttfts else 0.0,
             "mean_latency_s": sum(lats) / len(lats) if lats else 0.0,
         }
+        if self.plan_cache is not None:
+            out["plan_cache"] = self.plan_cache.stats()
+        return out

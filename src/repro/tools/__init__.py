@@ -1,0 +1,1 @@
+"""Deployment tooling: offline utilities around the AutoChunk pipeline."""

@@ -1,9 +1,26 @@
+import importlib.util
+import pathlib
+import sys
+
 import jax
 import pytest
 
 # Tests run on the single real CPU device (the dry-run sets its own 512-dev
 # placeholder env in a separate process; NEVER set it here).
 jax.config.update("jax_enable_x64", False)
+
+# The property tests want hypothesis (a dev dependency, installed by
+# ``pip install -e .[dev]`` and in CI).  In minimal environments without it,
+# register the deterministic fallback before test modules import it.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _stub_path = pathlib.Path(__file__).with_name("_hypothesis_stub.py")
+    _spec = importlib.util.spec_from_file_location("hypothesis", _stub_path)
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _mod.strategies
 
 
 @pytest.fixture(scope="session")

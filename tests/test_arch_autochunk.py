@@ -9,6 +9,9 @@ import pytest
 from repro.configs import ASSIGNED, get_config
 from repro.models import model as M
 
+# full arch sweep: ~11 compiles of multi-layer blocks; nightly/full CI only
+pytestmark = pytest.mark.slow
+
 S = 128
 
 

@@ -40,6 +40,7 @@ def test_smoke_forward_shapes_no_nan(arch, keys):
     assert not bool(jnp.isnan(aux).any())
 
 
+@pytest.mark.slow  # full-zoo train-step sweep (~45s); nightly CI
 @pytest.mark.parametrize("arch", ASSIGNED)
 def test_smoke_train_step(arch, keys):
     cfg = get_config(arch).reduced().with_(dtype="float32")
@@ -76,6 +77,7 @@ def test_prefill_decode_matches_forward(arch, keys):
     )
 
 
+@pytest.mark.slow  # ~18s long-decode loop; nightly CI
 def test_sliding_window_ring_cache_long_decode():
     """Decode far past the ring width must equal windowed full attention."""
     cfg = get_config("minitron-8b").reduced().with_(

@@ -1,0 +1,345 @@
+"""Plan persistence + cache subsystem tests.
+
+Covers the ISSUE-1 acceptance contract: JSON round-trip fidelity, warm-hit
+replay that provably skips the search/selection passes (stage counters, not
+timing), numerically identical cold vs warm outputs, and structural key
+invalidation on shape/budget changes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ChunkPlan,
+    PlanCache,
+    build_autochunk,
+    build_chunked_fn,
+    build_fn_from_plan,
+    estimate_memory,
+    plan_cache_key,
+    search_chunks,
+    stats,
+    trace,
+)
+from repro.core.plan import PlanApplyError, PlanStage
+from repro.core.selection import CostHyper
+
+
+def _mini_block(w, x):
+    q = x @ w["wq"]
+    k = x @ w["wk"]
+    v = x @ w["wv"]
+    logits = jnp.einsum("bsd,btd->bst", q, k) / jnp.sqrt(x.shape[-1])
+    a = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bst,btd->bsd", a, v) @ w["wo"]
+    h = x + o
+    ff = jax.nn.gelu(h @ w["w1"]) @ w["w2"]
+    return h + ff
+
+
+def _mini_weights(d=32, f=64, key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 6)
+    return {
+        "wq": jax.random.normal(ks[0], (d, d)) * 0.1,
+        "wk": jax.random.normal(ks[1], (d, d)) * 0.1,
+        "wv": jax.random.normal(ks[2], (d, d)) * 0.1,
+        "wo": jax.random.normal(ks[3], (d, d)) * 0.1,
+        "w1": jax.random.normal(ks[4], (d, f)) * 0.1,
+        "w2": jax.random.normal(ks[5], (f, d)) * 0.1,
+    }
+
+
+def _example():
+    w = _mini_weights()
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, 64, 32))
+    return w, x
+
+
+# ---------------------------------------------------------------------------
+# Serialization
+# ---------------------------------------------------------------------------
+
+def test_plan_json_roundtrip_identity():
+    w, x = _example()
+    res = build_autochunk(_mini_block, (w, x), budget_ratio=0.3)
+    assert res.plan, "expected at least one stage for this budget"
+    plan = res.to_chunk_plan()
+    plan2 = ChunkPlan.from_json(plan.to_json())
+    assert plan2.to_dict() == plan.to_dict()
+    assert plan2.stages[0].n_chunks == res.plan[0].n_chunks
+    assert plan2.stages[0].chunk_extent == res.plan[0].chunk_extent
+
+
+def test_plan_save_load_apply_matches_fresh_search(tmp_path):
+    """serialize -> load from disk -> apply == numerically fresh search."""
+    w, x = _example()
+    res = build_autochunk(_mini_block, (w, x), budget_ratio=0.3)
+    path = tmp_path / "plan.json"
+    res.to_chunk_plan().save(path)
+    loaded = ChunkPlan.load(path)
+
+    flat, tree = jax.tree_util.tree_flatten((w, x))
+
+    def flat_fn(*leaves):
+        ww, xx = jax.tree_util.tree_unflatten(tree, leaves)
+        return (_mini_block(ww, xx),)
+
+    fn, g, prof = build_fn_from_plan(flat_fn, flat, loaded)
+    y_fresh = np.asarray(res.fn(w, x))
+    y_replay = np.asarray(fn(*flat)[0])
+    np.testing.assert_array_equal(y_replay, y_fresh)
+    assert prof.peak_bytes == res.final_peak
+
+
+def test_multi_stage_plan_replay_roundtrip():
+    """A hand-built 2-stage plan survives JSON and replays exactly."""
+
+    def f(w, x):
+        s = jnp.einsum("bsd,btd->bst", x @ w["a"], x @ w["a"])
+        y1 = jnp.einsum("bst,btd->bsd", jax.nn.softmax(s, axis=-1), x)
+        h = jnp.tanh(y1 @ w["m"])
+        s2 = jnp.einsum("bsd,btd->bst", h @ w["b"], h @ w["b"])
+        y2 = jnp.einsum("bst,btd->bsd", jax.nn.softmax(s2, axis=-1), h)
+        return y1 + y2
+
+    d = 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    w = {
+        "a": jax.random.normal(ks[0], (d, d)) * 0.1,
+        "m": jax.random.normal(ks[1], (d, d)) * 0.1,
+        "b": jax.random.normal(ks[2], (d, d)) * 0.1,
+    }
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 256, d))
+    flat, tree = jax.tree_util.tree_flatten((w, x))
+
+    def flat_fn(*leaves):
+        ww, xx = jax.tree_util.tree_unflatten(tree, leaves)
+        return (f(ww, xx),)
+
+    stages = []
+    cur = flat_fn
+    for _ in range(2):
+        g, _ = trace(cur, flat)
+        prof = estimate_memory(g)
+        cands = [
+            c
+            for c in search_chunks(g, prof)
+            if c.chunk_extent == 256 and c.e - c.s < 12
+        ]
+        assert cands, "expected tight seq-dim candidates"
+        stages.append(PlanStage.from_candidate(g, cands[0], 4))
+        cur = build_chunked_fn(g, cands[0], 4)
+
+    plan = ChunkPlan(
+        cache_key="test", budget_bytes=0, baseline_peak=0, final_peak=0,
+        stages=stages,
+    )
+    plan = ChunkPlan.from_json(plan.to_json())  # force serialization
+    fn, _, prof = build_fn_from_plan(flat_fn, flat, plan)
+    np.testing.assert_allclose(
+        np.asarray(fn(*flat)[0]), np.asarray(f(w, x)), atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# Cache hit/miss behavior
+# ---------------------------------------------------------------------------
+
+def test_warm_hit_skips_search_and_selection():
+    """Acceptance: second identical call runs zero search/selection passes
+    and produces outputs identical to the cold-compile path."""
+    w, x = _example()
+    cache = PlanCache()
+    r1 = build_autochunk(_mini_block, (w, x), budget_ratio=0.3, cache=cache)
+    assert not r1.from_cache and r1.plan
+
+    before = stats.snapshot()
+    r2 = build_autochunk(_mini_block, (w, x), budget_ratio=0.3, cache=cache)
+    delta = stats.delta(before)
+
+    assert r2.from_cache
+    assert delta["search_calls"] == 0
+    assert delta["rank_calls"] == 0
+    assert delta["plan_cache_hits"] == 1
+    # replay needs exactly one re-trace per stage + one verification trace
+    assert delta["trace_calls"] == len(r1.plan) + 1
+    assert r2.final_peak == r1.final_peak
+    np.testing.assert_array_equal(
+        np.asarray(r2.fn(w, x)), np.asarray(r1.fn(w, x))
+    )
+
+
+def test_cache_miss_then_populate():
+    w, x = _example()
+    cache = PlanCache()
+    key_count = len(cache)
+    assert key_count == 0
+    r = build_autochunk(_mini_block, (w, x), budget_ratio=0.3, cache=cache)
+    assert not r.from_cache
+    assert r.cache_key is not None
+    assert len(cache) == 1
+    assert r.cache_key in cache
+
+
+def test_disk_cache_shared_between_instances(tmp_path):
+    w, x = _example()
+    c1 = PlanCache(tmp_path / "plans")
+    r1 = build_autochunk(_mini_block, (w, x), budget_ratio=0.3, cache=c1)
+    assert not r1.from_cache
+
+    # a *fresh* process-level cache over the same directory hits from disk
+    c2 = PlanCache(tmp_path / "plans")
+    r2 = build_autochunk(_mini_block, (w, x), budget_ratio=0.3, cache=c2)
+    assert r2.from_cache
+    np.testing.assert_array_equal(
+        np.asarray(r2.fn(w, x)), np.asarray(r1.fn(w, x))
+    )
+    # path form of the cache argument is accepted too
+    r3 = build_autochunk(
+        _mini_block, (w, x), budget_ratio=0.3, cache=str(tmp_path / "plans")
+    )
+    assert r3.from_cache
+
+
+def test_corrupt_disk_plan_falls_back_to_search(tmp_path):
+    w, x = _example()
+    cdir = tmp_path / "plans"
+    c1 = PlanCache(cdir)
+    r1 = build_autochunk(_mini_block, (w, x), budget_ratio=0.3, cache=c1)
+    for p in cdir.glob("*.json"):
+        p.write_text("{not json")
+    c2 = PlanCache(cdir)
+    r2 = build_autochunk(_mini_block, (w, x), budget_ratio=0.3, cache=c2)
+    assert not r2.from_cache  # unreadable plan -> cold compile, not a crash
+    assert r2.final_peak == r1.final_peak
+
+
+def test_stale_plan_replay_failure_falls_back():
+    """A plan whose indices no longer resolve triggers a cold re-compile."""
+    w, x = _example()
+    cache = PlanCache()
+    r1 = build_autochunk(_mini_block, (w, x), budget_ratio=0.3, cache=cache)
+    key = r1.cache_key
+    broken = cache.get(key)
+    broken.stages[0].var_dim = {"eqn:9999:0": 1}  # unresolvable var name
+    cache.put(key, broken)
+
+    before = stats.snapshot()
+    r2 = build_autochunk(_mini_block, (w, x), budget_ratio=0.3, cache=cache)
+    delta = stats.delta(before)
+    assert not r2.from_cache
+    assert delta["plan_replay_failures"] == 1
+    assert delta["search_calls"] > 0  # fell back to the real pipeline
+    np.testing.assert_allclose(
+        np.asarray(r2.fn(w, x)), np.asarray(_mini_block(w, x)), atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# Cache-key invalidation
+# ---------------------------------------------------------------------------
+
+def _graph_for(x_shape, budget):
+    w = _mini_weights()
+    x = jax.ShapeDtypeStruct(x_shape, jnp.float32)
+    flat, tree = jax.tree_util.tree_flatten((w, x))
+
+    def flat_fn(*leaves):
+        ww, xx = jax.tree_util.tree_unflatten(tree, leaves)
+        return (_mini_block(ww, xx),)
+
+    g, _ = trace(flat_fn, flat)
+    return plan_cache_key(g, budget, CostHyper(), {"window": 48})
+
+
+def test_cache_key_invalidates_on_shape_change():
+    k1 = _graph_for((2, 64, 32), 100_000)
+    k2 = _graph_for((2, 128, 32), 100_000)
+    k3 = _graph_for((4, 64, 32), 100_000)
+    assert len({k1, k2, k3}) == 3
+
+
+def test_cache_key_invalidates_on_budget_and_hyper_change():
+    w = _mini_weights()
+    x = jax.ShapeDtypeStruct((2, 64, 32), jnp.float32)
+    flat, tree = jax.tree_util.tree_flatten((w, x))
+
+    def flat_fn(*leaves):
+        ww, xx = jax.tree_util.tree_unflatten(tree, leaves)
+        return (_mini_block(ww, xx),)
+
+    g, _ = trace(flat_fn, flat)
+    k_base = plan_cache_key(g, 100_000, CostHyper(), {"window": 48})
+    assert plan_cache_key(g, 100_000, CostHyper(), {"window": 48}) == k_base
+    assert plan_cache_key(g, 200_000, CostHyper(), {"window": 48}) != k_base
+    assert (
+        plan_cache_key(g, 100_000, CostHyper(lam=9.0), {"window": 48}) != k_base
+    )
+    assert plan_cache_key(g, 100_000, CostHyper(), {"window": 32}) != k_base
+
+
+def test_cache_key_stable_across_retrace():
+    w = _mini_weights()
+    x = jax.ShapeDtypeStruct((2, 64, 32), jnp.float32)
+    flat, tree = jax.tree_util.tree_flatten((w, x))
+
+    def flat_fn(*leaves):
+        ww, xx = jax.tree_util.tree_unflatten(tree, leaves)
+        return (_mini_block(ww, xx),)
+
+    g1, _ = trace(flat_fn, flat)
+    g2, _ = trace(flat_fn, flat)  # fresh Var objects, same structure
+    assert plan_cache_key(g1, 1, None, None) == plan_cache_key(g2, 1, None, None)
+
+
+def test_budget_change_with_shared_cache_compiles_separately():
+    w, x = _example()
+    cache = PlanCache()
+    r1 = build_autochunk(_mini_block, (w, x), budget_ratio=0.3, cache=cache)
+    r2 = build_autochunk(_mini_block, (w, x), budget_ratio=0.5, cache=cache)
+    assert not r2.from_cache  # different budget -> different key
+    assert len(cache) == 2
+    r3 = build_autochunk(_mini_block, (w, x), budget_ratio=0.3, cache=cache)
+    assert r3.from_cache
+    assert r3.cache_key == r1.cache_key
+
+
+# ---------------------------------------------------------------------------
+# Plan-apply validation
+# ---------------------------------------------------------------------------
+
+def test_plan_apply_rejects_wrong_graph():
+    w, x = _example()
+    res = build_autochunk(_mini_block, (w, x), budget_ratio=0.3)
+    plan = res.to_chunk_plan()
+
+    # a different function: way fewer equations
+    def other(w, x):
+        return x @ w["wq"]
+
+    flat, tree = jax.tree_util.tree_flatten((w, x))
+
+    def flat_other(*leaves):
+        ww, xx = jax.tree_util.tree_unflatten(tree, leaves)
+        return (other(ww, xx),)
+
+    with pytest.raises(PlanApplyError):
+        build_fn_from_plan(flat_other, flat, plan)
+
+
+def test_precompile_cli_smoke(tmp_path, capsys):
+    from repro.tools import precompile
+
+    argv = [
+        "--configs", "gpt-paper", "--seq-lens", "64", "--budgets", "0.4",
+        "--cache-dir", str(tmp_path / "plans"),
+    ]
+    assert precompile.main(argv) == 0
+    cold = capsys.readouterr().out
+    assert ",0," in cold.splitlines()[1]  # cached=0 on first build
+    assert list((tmp_path / "plans").glob("*.json"))
+
+    assert precompile.main(argv) == 0
+    warm = capsys.readouterr().out
+    assert ",1," in warm.splitlines()[1]  # cached=1 on the second run

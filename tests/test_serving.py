@@ -99,6 +99,62 @@ def test_engine_with_autochunk_logit_exact(setup):
     )
 
 
+def test_engine_plan_cache_and_reconfigure(setup, tmp_path):
+    """The engine warms its plan cache at construction; reconfiguring back
+    to a previously seen shape replays the stored plan with zero search or
+    selection passes, and a second engine sharing the on-disk cache starts
+    warm."""
+    from repro.core import stats
+
+    cfg, params = setup
+    cache_dir = tmp_path / "plans"
+    e1 = ServeEngine(
+        cfg, params, max_batch=2, max_len=64,
+        autochunk_budget=0.5, plan_cache=cache_dir,
+    )
+    assert e1.plan_cache.stats()["entries"] == 1
+    assert not e1.autochunk_result.from_cache
+
+    # a second engine over the same directory compiles from the saved plan
+    before = stats.snapshot()
+    e2 = ServeEngine(
+        cfg, params, max_batch=2, max_len=64,
+        autochunk_budget=0.5, plan_cache=cache_dir,
+    )
+    delta = stats.delta(before)
+    assert e2.autochunk_result.from_cache
+    assert delta["search_calls"] == 0 and delta["rank_calls"] == 0
+
+    # logits agree between the cold-compiled and plan-replayed waves
+    for e in (e1, e2):
+        e.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=1))
+        e._admit()
+    toks = jnp.asarray([5, 0], dtype=jnp.int32)
+    pos = jnp.asarray([3, 0], dtype=jnp.int32)
+    lg1, _ = e1._decode_wave(e1.cache, toks, pos)
+    lg2, _ = e2._decode_wave(e2.cache, toks, pos)
+    np.testing.assert_array_equal(np.asarray(lg1), np.asarray(lg2))
+    e1.run()
+    e2.run()
+
+    # reconfigure to a new shape (cold), then back (warm, no search)
+    e2.reconfigure(max_len=96)
+    assert len(e2.plan_cache) == 2
+    before = stats.snapshot()
+    e2.reconfigure(max_len=64)
+    delta = stats.delta(before)
+    assert delta["search_calls"] == 0 and delta["plan_cache_hits"] == 1
+    e2.submit(Request(rid=1, prompt=[1, 2, 3], max_new_tokens=2))
+    done = e2.run()
+    assert done[-1].done
+
+    # reconfigure refuses to drop in-flight requests
+    e2.submit(Request(rid=2, prompt=[4], max_new_tokens=2))
+    with pytest.raises(RuntimeError):
+        e2.reconfigure(max_len=96)
+    e2.run()
+
+
 def test_engine_metrics(setup):
     cfg, params = setup
     eng = ServeEngine(cfg, params, max_batch=2, max_len=64)

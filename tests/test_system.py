@@ -11,6 +11,9 @@ from repro.data import make_batch, synthetic_stream
 from repro.models import model as M
 from repro.training import run_train
 
+# end-to-end compiles + training convergence: nightly/full CI only
+pytestmark = pytest.mark.slow
+
 
 def test_paper_claim_topline_reduction_on_gpt_block():
     """Paper: >80% activation reduction on long-sequence inference.  At a

@@ -5,10 +5,9 @@ recompile at the same memory budget, and report wall-time relative to the
 full strategy."""
 from __future__ import annotations
 
-from repro.core import build_autochunk
 from repro.core.selection import CostHyper
 
-from .common import gpt_block_model, time_fn
+from .common import chunked, gpt_block_model, time_fn
 
 
 def run(csv_rows, seq=1536, budget=0.12):
@@ -23,7 +22,7 @@ def run(csv_rows, seq=1536, budget=0.12):
     }
     t_ref = None
     for name, kw in variants.items():
-        res = build_autochunk(fwd, (params, batch), budget_ratio=budget, **kw)
+        res = chunked(fwd, (params, batch), budget_ratio=budget, **kw)
         t = time_fn(res.fn, params, batch)
         if t_ref is None:
             t_ref = t

@@ -1,15 +1,47 @@
-"""Shared benchmark helpers: timing, memory estimation, model builders."""
+"""Shared benchmark helpers: timing, memory estimation, model builders,
+and the suite-wide plan cache.
+
+Every suite compiles through :func:`chunked` so that ``benchmarks.run
+--plan-cache DIR`` (or the ``AUTOCHUNK_PLAN_CACHE`` env var) makes repeated
+benchmark runs replay stored chunk plans instead of re-paying the search —
+the compile-latency part of a sweep drops to codegen only.
+"""
 from __future__ import annotations
 
+import os
 import time
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core import build_autochunk, estimate_memory, trace
+from repro.core.plan import PlanCache
 from repro.models import model as M
+
+_PLAN_CACHE: Optional[PlanCache] = None
+_PLAN_CACHE_INIT = False
+
+
+def set_plan_cache(path: Optional[str]) -> None:
+    """Point every suite's compile at an on-disk plan cache (None disables)."""
+    global _PLAN_CACHE, _PLAN_CACHE_INIT
+    _PLAN_CACHE = PlanCache(path) if path else None
+    _PLAN_CACHE_INIT = True
+
+
+def get_plan_cache() -> Optional[PlanCache]:
+    global _PLAN_CACHE, _PLAN_CACHE_INIT
+    if not _PLAN_CACHE_INIT:
+        set_plan_cache(os.environ.get("AUTOCHUNK_PLAN_CACHE") or None)
+    return _PLAN_CACHE
+
+
+def chunked(fn, example_args, **kwargs):
+    """``build_autochunk`` with the suite-wide plan cache wired in."""
+    kwargs.setdefault("cache", get_plan_cache())
+    return build_autochunk(fn, example_args, **kwargs)
 
 
 def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:

@@ -10,9 +10,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import build_autochunk
-
-from .common import gpt_block_model, peak_activation
+from .common import chunked, gpt_block_model, peak_activation
 
 
 def run(csv_rows):
@@ -22,7 +20,7 @@ def run(csv_rows):
     for s in seqs:
         cfg, params, batch, fwd = gpt_block_model(s)
         base = peak_activation(fwd, (params, batch))
-        res = build_autochunk(fwd, (params, batch), budget_ratio=0.2)
+        res = chunked(fwd, (params, batch), budget_ratio=0.2)
         rows.append((s, base, res.final_peak))
         csv_rows.append(
             (f"fig1_peak_s{s}", 0.0,
@@ -37,7 +35,7 @@ def run(csv_rows):
     chunk_max = base_max
     for s in [256, 512, 1024, 2048, 4096, 8192]:
         cfg, params, batch, fwd = gpt_block_model(s)
-        res = build_autochunk(
+        res = chunked(
             fwd, (params, batch), budget_bytes=int(budget_bytes), max_stages=16
         )
         if res.final_peak <= budget_bytes * 1.02:

@@ -44,13 +44,11 @@ def smoke(rows) -> None:
     imports/APIs in the benchmark stack without measuring performance."""
     import jax
 
-    from repro.core import build_autochunk
-
-    from .common import gpt_block_model, peak_activation, time_fn
+    from .common import chunked, gpt_block_model, peak_activation, time_fn
 
     cfg, params, batch, fwd = gpt_block_model(64, n_layers=1, d=64)
     baseline = peak_activation(fwd, (params, batch))
-    res = build_autochunk(fwd, (params, batch), budget_ratio=0.5)
+    res = chunked(fwd, (params, batch), budget_ratio=0.5)
     us = time_fn(res.fn, params, batch, iters=2, warmup=1)
     ok = res.final_peak <= baseline
     jax.block_until_ready(res.fn(params, batch))
@@ -67,7 +65,15 @@ def main() -> None:
                     help="comma-separated subset of " + ",".join(SUITES))
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-config harness check for CI (no perf claims)")
+    ap.add_argument("--plan-cache", type=str, default=None,
+                    help="on-disk chunk-plan cache directory: repeated runs"
+                         " replay stored plans instead of re-searching"
+                         " (also settable via AUTOCHUNK_PLAN_CACHE)")
     args = ap.parse_args()
+    from . import common
+
+    if args.plan_cache:
+        common.set_plan_cache(args.plan_cache)
     if args.smoke:
         names = ["smoke"]
         suites = {"smoke": smoke}
@@ -89,6 +95,9 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    cache = common.get_plan_cache()
+    if cache is not None:
+        print(f"# plan cache: {cache.stats()}", file=sys.stderr)
     if args.smoke and failed:
         sys.exit(1)  # smoke mode is a CI gate; real runs always report
 

@@ -6,9 +6,7 @@ unchunked baseline.  The paper's claim: <=3% loss at 40-50%, <=10% at 20%.
 """
 from __future__ import annotations
 
-from repro.core import build_autochunk
-
-from .common import MODELS, peak_activation, time_fn
+from .common import MODELS, chunked, peak_activation, time_fn
 
 
 def run(csv_rows, budgets=(0.5, 0.4, 0.2), seq=1024):
@@ -18,7 +16,7 @@ def run(csv_rows, budgets=(0.5, 0.4, 0.2), seq=1024):
         base_peak = peak_activation(fwd, (params, batch))
         csv_rows.append((f"fig5_{name}_baseline", t_base, "ratio=1.00;speed=100%"))
         for b in budgets:
-            res = build_autochunk(fwd, (params, batch), budget_ratio=b)
+            res = chunked(fwd, (params, batch), budget_ratio=b)
             t = time_fn(res.fn, params, batch)
             csv_rows.append(
                 (f"fig5_{name}_budget{int(b*100)}", t,

@@ -10,10 +10,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import build_autochunk
 from repro.core.expert_chunk import expert_chunk_block
 
-from .common import gpt_block_model, peak_activation, time_fn
+from .common import chunked, gpt_block_model, peak_activation, time_fn
 
 
 def run(csv_rows, seq=1024):
@@ -67,13 +66,13 @@ def run(csv_rows, seq=1024):
     )
 
     # --- AutoChunk: minimum memory (tiny budget), and matched-memory speed --
-    res_min = build_autochunk(fwd, (params, batch), budget_ratio=0.02)
+    res_min = chunked(fwd, (params, batch), budget_ratio=0.02)
     csv_rows.append(
         ("fig7_autochunk_min", 0.0,
          f"min_peak_MiB={res_min.final_peak/2**20:.2f};"
          f"vs_expert={100*(1-res_min.final_peak/peak_expert):.1f}%_lower")
     )
-    res_eq = build_autochunk(fwd, (params, batch), budget_bytes=peak_expert)
+    res_eq = chunked(fwd, (params, batch), budget_bytes=peak_expert)
     t_auto = time_fn(res_eq.fn, params, batch)
     csv_rows.append(
         ("fig8_autochunk_matched_mem", t_auto,

@@ -13,9 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import build_autochunk
-
-from .common import gpt_block_model, peak_activation, time_fn
+from .common import chunked, gpt_block_model, peak_activation, time_fn
 
 
 def mea_attention(q, k, v, *, block: int = 128):
@@ -90,7 +88,7 @@ def run(csv_rows, seq=1024):
         ("fig6_fused_only", t_fused,
          f"peak_MiB={peak_fused/2**20:.2f};vs_plain={peak_fused/peak_plain:.2f}")
     )
-    res = build_autochunk(fwd_fused, (params, batch), budget_ratio=0.3)
+    res = chunked(fwd_fused, (params, batch), budget_ratio=0.3)
     t_both = time_fn(res.fn, params, batch)
     csv_rows.append(
         ("fig6_fused_plus_autochunk", t_both,

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core import build_autochunk
+from repro.core import ChunkConfig, autochunk
 from repro.models import model as M
 
 
@@ -23,22 +23,29 @@ def main():
     def fwd(params, batch):
         return M.forward(cfg, params, batch)[0]
 
+    # one transform per budget spec; the staged trace/search path reports
+    # peaks from abstract shapes without compiling or materializing anything
+    cf_ratio = autochunk(fwd, ChunkConfig(budget_ratio=0.2, max_stages=16))
     print(f"{'seq':>6} {'baseline MiB':>13} {'autochunk MiB':>14} {'reduction':>10}")
     budget = None
     for s in (256, 512, 1024, 2048, 4096):
-        batch = {"tokens": jnp.ones((1, s), jnp.int32)}
-        res = build_autochunk(fwd, (params, batch), budget_ratio=0.2, max_stages=16)
+        batch = {"tokens": jax.ShapeDtypeStruct((1, s), jnp.int32)}
+        planned = cf_ratio.trace(params, batch).search()
         if budget is None:
-            budget = res.baseline_peak  # "the memory wall": peak at seq 256
-        print(f"{s:>6} {res.baseline_peak/2**20:>13.2f}"
-              f" {res.final_peak/2**20:>14.2f}"
-              f" {res.reduction*100:>9.1f}%")
+            budget = planned.baseline_peak  # "the memory wall": peak @ 256
+        red = 1 - planned.final_peak / planned.baseline_peak
+        print(f"{s:>6} {planned.baseline_peak/2**20:>13.2f}"
+              f" {planned.final_peak/2**20:>14.2f}"
+              f" {red*100:>9.1f}%")
     print(f"\nfixed budget = baseline@256 = {budget/2**20:.2f} MiB")
+    cf_fixed = autochunk(
+        fwd, ChunkConfig(budget_bytes=int(budget), max_stages=16)
+    )
     for s in (512, 1024, 2048, 4096):
-        batch = {"tokens": jnp.ones((1, s), jnp.int32)}
-        res = build_autochunk(fwd, (params, batch), budget_bytes=budget, max_stages=16)
-        fits = res.final_peak <= budget * 1.02
-        print(f"  seq {s}: chunked peak {res.final_peak/2**20:.2f} MiB"
+        batch = {"tokens": jax.ShapeDtypeStruct((1, s), jnp.int32)}
+        planned = cf_fixed.trace(params, batch).search()
+        fits = planned.final_peak <= budget * 1.02
+        print(f"  seq {s}: chunked peak {planned.final_peak/2**20:.2f} MiB"
               f" -> {'FITS' if fits else 'exceeds budget'}")
         if not fits:
             break

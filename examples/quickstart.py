@@ -1,9 +1,10 @@
-"""Quickstart: the paper's one-liner — ``model = autochunk(model, budget)``.
+"""Quickstart: the AutoChunk transform and its staged AOT API.
 
 Builds a GPT block stack, compiles it through AutoChunk at a 20% activation
 budget, prints the compilation report, and verifies outputs are unchanged.
-Then recompiles against a plan cache to show the persistence fast path: the
-second compile replays the saved plan instead of re-searching.
+Then demonstrates the staged path (``trace -> search -> compile``) with an
+on-disk plan cache and shape-bucketed reuse: a second sequence length in
+the same bucket replays the searched plan with zero search passes.
 
   python examples/quickstart.py          (after `pip install -e .`)
 """
@@ -15,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import autochunk
+from repro.core import ChunkConfig, autochunk, stats
 from repro.models import model as M
 
 
@@ -29,34 +30,53 @@ def main():
     def model(params, batch):
         return M.forward(cfg, params, batch)[0]
 
-    # --- the paper's API ---------------------------------------------------
-    chunked = autochunk(model, (params, batch), memory_budget=0.2)
+    # --- the transform ------------------------------------------------------
+    chunked = autochunk(model, ChunkConfig(budget_ratio=0.2))
+    y1 = chunked(params, batch)      # lazy compile at this shape, then run
     # ------------------------------------------------------------------------
 
     print(chunked.autochunk_result.report())
     y0 = model(params, batch)
-    y1 = jax.jit(chunked)(params, batch)
     err = float(jnp.abs(y0 - y1).max())
     print(f"\noutput max |delta| vs baseline: {err:.2e}")
     assert np.allclose(np.asarray(y0), np.asarray(y1), atol=2e-4)
     print("outputs identical — activation peak reduced "
           f"{chunked.autochunk_result.reduction*100:.1f}%")
 
-    # --- plan persistence ---------------------------------------------------
-    # Compile once against an on-disk cache, then again: the warm call
-    # replays the stored ChunkPlan (one JSON file per structural key) and
-    # never runs the search/selection passes.
+    # --- staged AOT + plan persistence + shape buckets ----------------------
+    # trace() profiles memory on abstract shapes (nothing materialized),
+    # search() yields the serializable ChunkPlan, compile() does codegen.
+    # Plans persist in the cache directory; a different sequence length in
+    # the same bucket replays the stored plan — zero search passes.
     with tempfile.TemporaryDirectory() as plan_dir:
+        cf = autochunk(model, ChunkConfig(budget_ratio=0.2), cache=plan_dir)
+        p_spec = jax.eval_shape(lambda k: M.init_params(cfg, k),
+                                jax.random.PRNGKey(0))
+        spec = {"tokens": jax.ShapeDtypeStruct((1, 900), jnp.int32)}
+
         t0 = time.time()
-        autochunk(model, (params, batch), memory_budget=0.2, cache=plan_dir)
+        planned = cf.trace(p_spec, spec).search()      # cold: full search
         cold_s = time.time() - t0
+        print(f"\nplan: {len(planned.plan.stages)} stages, "
+              f"{planned.baseline_peak/2**20:.1f} -> "
+              f"{planned.final_peak/2**20:.1f} MiB "
+              f"(searched in {cold_s:.2f}s)")
+
+        spec2 = {"tokens": jax.ShapeDtypeStruct((1, 1000), jnp.int32)}
+        before = stats.snapshot()
         t0 = time.time()
-        warm = autochunk(model, (params, batch), memory_budget=0.2, cache=plan_dir)
+        compiled2 = cf.trace(p_spec, spec2).search().compile()  # bucket hit
         warm_s = time.time() - t0
-        res = warm.autochunk_result
-        assert res.from_cache
-        print(f"\nplan cache: cold compile {cold_s:.2f}s -> warm replay "
-              f"{warm_s:.2f}s ({cold_s / max(warm_s, 1e-9):.0f}x faster)")
+        d = stats.delta(before)
+        print(f"seq 1000 (same bucket as 900): compiled in {warm_s:.2f}s "
+              f"with search_passes={d['search_passes']} "
+              f"(bucket_hits={d['plan_bucket_hits']}) — "
+              f"{cold_s / max(warm_s, 1e-9):.0f}x faster than the search")
+        batch2 = {"tokens": jnp.ones((1, 1000), jnp.int32)}
+        np.testing.assert_allclose(
+            np.asarray(compiled2(params, batch2)),
+            np.asarray(model(params, batch2)), atol=2e-4,
+        )
 
 
 if __name__ == "__main__":

@@ -30,15 +30,19 @@ def main():
 
 def _serve(cfg, params, plan_dir):
     runs = [
-        (None, "baseline"),
-        (0.4, "autochunk@0.4"),
-        (0.4, "warm restart"),  # same shape+budget: replays the saved plan
+        (None, "baseline", 128),
+        (0.4, "autochunk@0.4", 128),
+        (0.4, "warm restart", 128),  # same shape+budget: replays saved plan
+        # different max_len in the same bucket (boundary 256): the plan
+        # searched at 128 replays rescaled — zero search passes
+        (0.4, "bucketed @160", 160),
     ]
-    for budget, tag in runs:
+    for budget, tag, max_len in runs:
         t_build0 = time.time()
         engine = ServeEngine(
-            cfg, params, max_batch=4, max_len=128,
+            cfg, params, max_batch=4, max_len=max_len,
             autochunk_budget=budget, plan_cache=plan_dir,
+            bucket_lens=(256,),
         )
         t_build = time.time() - t_build0
         if budget is not None:

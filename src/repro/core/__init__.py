@@ -2,6 +2,8 @@
 from . import stats
 from .api import AutoChunkResult, StageRecord, autochunk, build_autochunk
 from .codegen import build_chunked_fn, build_fn_from_plan, graph_to_fn
+from .config import ChunkConfig, ShapeBucketer
+from .staged import ChunkedFunction, CompiledFunction, Planned, Traced
 from .estimation import MemoryProfile, estimate_memory
 from .graph import Graph, dim_stride, eqn_flops, graph_flops, trace
 from .plan import (
@@ -17,7 +19,13 @@ from .selection import CostHyper, chunk_cost, rank_candidates
 
 __all__ = [
     "AutoChunkResult",
+    "ChunkConfig",
+    "ChunkedFunction",
+    "CompiledFunction",
+    "Planned",
+    "ShapeBucketer",
     "StageRecord",
+    "Traced",
     "autochunk",
     "build_autochunk",
     "build_chunked_fn",

@@ -1,163 +1,55 @@
-"""Public AutoChunk API: ``autochunk(fn, example_args, memory budget) -> fn``.
+"""Public AutoChunk API: ``autochunk(fn, ChunkConfig(...)) -> ChunkedFunction``.
 
-Mirrors the paper's ``model = autochunk(model, memory_budget)`` entry point.
-The driver runs the compiler stages (estimate -> search -> select -> codegen)
-until the peak intermediate-activation memory fits the budget, verifying
-every applied stage with a true re-trace + re-estimation rather than
-trusting the analytic model (jaxprs make this cheap and exact).
+The transform mirrors ``jax.jit``'s AOT surface — each paper pass is a
+first-class stage:
+
+    cf = autochunk(fn, ChunkConfig(budget_ratio=0.4))
+    y  = cf(*args)                                  # lazy per-shape compile
+    compiled = cf.trace(*specs).search().compile()  # explicit staged AOT
+
+``cf.trace()`` runs the estimate pass (graph + memory profile),
+``.search()`` the chunk search + selection (yielding a serializable
+:class:`~repro.core.plan.ChunkPlan`), ``.compile()`` the codegen.  Plans are
+reused across *similar* shapes via :class:`~repro.core.config.ShapeBucketer`
+and persisted via :class:`~repro.core.plan.PlanCache`.
+
+The pre-staged surface is kept working:
+
+* ``build_autochunk(fn, example_args, budget_ratio=...)`` — the one-shot
+  driver returning an :class:`AutoChunkResult` (stable; used by tools and
+  benchmarks that want the full report in one call).
+* ``autochunk(fn, example_args, memory_budget)`` — the paper-style wrapper,
+  now a thin deprecation shim over the transform.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, List, Optional, Sequence, Tuple
+import warnings
+from typing import Any, Callable, Optional, Sequence
 
-import jax
-from jax import tree_util
+from .config import ChunkConfig, ShapeBucketer
+from .selection import CostHyper
+from .staged import (
+    _DEFAULT_BUCKETER,
+    AutoChunkResult,
+    ChunkedFunction,
+    CompiledFunction,
+    Planned,
+    StageRecord,
+    Traced,
+)
 
-from . import stats
-from .codegen import build_chunked_fn, build_fn_from_plan
-from .estimation import MemoryProfile, estimate_memory
-from .graph import Graph, trace
-from .plan import ChunkPlan, PlanApplyError, PlanStage, as_plan_cache, plan_cache_key
-from .search import search_chunks
-from .selection import CostHyper, rank_candidates
-
-
-@dataclass
-class StageRecord:
-    stage: int
-    region: Tuple[int, int]
-    n_chunks: int
-    chunk_extent: int
-    n_loop_eqns: int
-    n_hoisted: int
-    cost: float
-    peak_before: int
-    peak_after: int
-
-
-@dataclass
-class AutoChunkResult:
-    """A chunked callable plus the full compilation report."""
-
-    fn: Callable                      # original signature
-    flat_fn: Callable                 # flat leaves -> flat leaves
-    plan: List[StageRecord]
-    baseline_peak: int
-    final_peak: int
-    budget_bytes: int
-    io_bytes: int
-    weight_bytes: int
-    elapsed_s: float = 0.0
-    plan_stages: List[PlanStage] = field(default_factory=list)
-    from_cache: bool = False
-    cache_key: Optional[str] = None
-
-    def to_chunk_plan(self) -> ChunkPlan:
-        """Detach the compilation into a serializable :class:`ChunkPlan`."""
-        return ChunkPlan(
-            cache_key=self.cache_key or "",
-            budget_bytes=self.budget_bytes,
-            baseline_peak=self.baseline_peak,
-            final_peak=self.final_peak,
-            stages=list(self.plan_stages),
-            meta={
-                "io_bytes": self.io_bytes,
-                "weight_bytes": self.weight_bytes,
-                "compile_s": round(self.elapsed_s, 3),
-            },
-        )
-
-    @property
-    def reduction(self) -> float:
-        if self.baseline_peak == 0:
-            return 0.0
-        return 1.0 - self.final_peak / self.baseline_peak
-
-    def report(self) -> str:
-        lines = [
-            "AutoChunk plan:",
-            f"  baseline peak activation: {self.baseline_peak/2**20:.2f} MiB",
-            f"  budget:                   {self.budget_bytes/2**20:.2f} MiB",
-            f"  final peak activation:    {self.final_peak/2**20:.2f} MiB"
-            f"  ({self.reduction*100:.1f}% reduction)",
-            f"  io bytes: {self.io_bytes/2**20:.2f} MiB,"
-            f" weights: {self.weight_bytes/2**20:.2f} MiB",
-            f"  compile time: {self.elapsed_s:.2f}s, stages: {len(self.plan)}"
-            + (" [from cache]" if self.from_cache else ""),
-        ]
-        for r in self.plan:
-            lines.append(
-                f"    stage {r.stage}: region [{r.region[0]},{r.region[1]}]"
-                f" n={r.n_chunks} (extent {r.chunk_extent})"
-                f" loop_eqns={r.n_loop_eqns} hoisted={r.n_hoisted}"
-                f" peak {r.peak_before/2**20:.1f} -> {r.peak_after/2**20:.1f} MiB"
-                f" cost={r.cost:.3f}"
-            )
-        return "\n".join(lines)
-
-
-def _progress_metric(prof: MemoryProfile):
-    """Lexicographic progress: peak, #equations at >=99% of peak, then the
-    mass of the top-8 live sets.  Repeated layer stacks tie on raw peak, so
-    a stage that flattens one of several equal peaks must still count as
-    progress (the next stage attacks the remaining ones)."""
-    peak = prof.peak_bytes
-    near = sum(1 for b in prof.per_eqn_bytes if b >= 0.99 * peak)
-    top = sum(sorted(prof.per_eqn_bytes)[-8:])
-    return (peak, near, top)
-
-
-def _flatten_spec(example_args: Sequence[Any], weight_argnums: Sequence[int]):
-    flat, in_tree = tree_util.tree_flatten(tuple(example_args))
-    counts = [len(tree_util.tree_leaves(a)) for a in example_args]
-    weight_flat: List[int] = []
-    pos = 0
-    for i, c in enumerate(counts):
-        if i in weight_argnums:
-            weight_flat.extend(range(pos, pos + c))
-        pos += c
-    return flat, in_tree, weight_flat
-
-
-def _package_result(
-    *,
-    fn: Callable,
-    out_tree_box: List[Any],
-    plan: List[StageRecord],
-    plan_stages: List[PlanStage],
-    baseline_peak: int,
-    final_peak: int,
-    budget_bytes: int,
-    io_bytes: int,
-    weight_bytes: int,
-    elapsed_s: float,
-    from_cache: bool = False,
-    cache_key: Optional[str] = None,
-) -> AutoChunkResult:
-    """Wrap a flat callable back into the original pytree signature."""
-    final_flat = fn
-
-    def wrapped(*args):
-        leaves, _ = tree_util.tree_flatten(tuple(args))
-        out_leaves = final_flat(*leaves)
-        return tree_util.tree_unflatten(out_tree_box[0], list(out_leaves))
-
-    return AutoChunkResult(
-        fn=wrapped,
-        flat_fn=final_flat,
-        plan=plan,
-        baseline_peak=baseline_peak,
-        final_peak=final_peak,
-        budget_bytes=budget_bytes,
-        io_bytes=io_bytes,
-        weight_bytes=weight_bytes,
-        elapsed_s=elapsed_s,
-        plan_stages=plan_stages,
-        from_cache=from_cache,
-        cache_key=cache_key,
-    )
+__all__ = [
+    "AutoChunkResult",
+    "ChunkConfig",
+    "ChunkedFunction",
+    "CompiledFunction",
+    "Planned",
+    "ShapeBucketer",
+    "StageRecord",
+    "Traced",
+    "autochunk",
+    "build_autochunk",
+]
 
 
 def build_autochunk(
@@ -178,7 +70,7 @@ def build_autochunk(
     verbose: bool = False,
     cache=None,
 ) -> AutoChunkResult:
-    """Run the full AutoChunk pipeline on ``fn``.
+    """Run the full AutoChunk pipeline on ``fn`` in one shot.
 
     ``example_args`` may be (pytrees of) arrays or ShapeDtypeStructs; nothing
     is materialized.  ``budget_ratio`` is relative to the baseline peak
@@ -190,208 +82,117 @@ def build_autochunk(
     directly — one re-trace per stage plus one verification re-trace, never
     a search or selection pass.  Misses (and replay failures) fall through
     to the full pipeline and store the resulting plan.
+
+    This is the loose-kwargs spelling of the staged API; it is equivalent to
+    ``autochunk(fn, ChunkConfig(...), cache=cache).compile(*example_args)``
+    with shape bucketing disabled, and returns the full
+    :class:`AutoChunkResult` report.
     """
     if (budget_ratio is None) == (budget_bytes is None):
         raise ValueError("give exactly one of budget_ratio / budget_bytes")
-    hyper = hyper or CostHyper()
-    cache = as_plan_cache(cache)
-    t0 = time.time()
-
-    flat_args, in_tree, weight_flat = _flatten_spec(example_args, weight_argnums)
-    out_tree_box: List[Any] = [None]
-
-    def flat_fn(*leaves):
-        args = tree_util.tree_unflatten(in_tree, leaves)
-        out = fn(*args)
-        out_leaves, out_tree = tree_util.tree_flatten(out)
-        out_tree_box[0] = out_tree
-        return tuple(out_leaves)
-
-    cur: Callable = flat_fn
-    plan: List[StageRecord] = []
-    plan_stages: List[PlanStage] = []
-    g, _ = trace(cur, flat_args, weight_argnums=weight_flat)
-    prof = estimate_memory(g)
-    baseline_peak = prof.peak_bytes
-    if budget_bytes is None:
-        budget_bytes = int(baseline_peak * budget_ratio)
-
-    ckey: Optional[str] = None
-    if cache is not None:
-        ckey = plan_cache_key(
-            g,
-            budget_bytes,
-            hyper,
-            {
-                "max_stages": max_stages,
-                "beam": beam,
-                "window": window,
-                "min_gain": min_gain,
-                "allow_hoist": allow_hoist,
-                "dim_blocklist": sorted(dim_blocklist),
-                "anneal": anneal,
-            },
-        )
-        saved = cache.get(ckey)
-        if saved is not None:
-            stats.bump("plan_cache_hits")
-            try:
-                final_flat, g2, prof2 = build_fn_from_plan(
-                    flat_fn,
-                    flat_args,
-                    saved,
-                    weight_argnums=weight_flat,
-                    baseline_graph=g,
-                )
-            except PlanApplyError:
-                stats.bump("plan_replay_failures")
-            else:
-                return _package_result(
-                    fn=final_flat,
-                    out_tree_box=out_tree_box,
-                    plan=[
-                        StageRecord(
-                            stage=i,
-                            region=(st.s, st.e),
-                            n_chunks=st.n_chunks,
-                            chunk_extent=st.chunk_extent,
-                            n_loop_eqns=len(st.in_loop),
-                            n_hoisted=len(st.hoisted),
-                            cost=st.cost,
-                            peak_before=st.peak_before,
-                            peak_after=st.peak_after,
-                        )
-                        for i, st in enumerate(saved.stages)
-                    ],
-                    plan_stages=list(saved.stages),
-                    baseline_peak=baseline_peak,
-                    final_peak=prof2.peak_bytes,
-                    budget_bytes=budget_bytes,
-                    io_bytes=prof2.io_bytes,
-                    weight_bytes=prof2.weight_bytes,
-                    elapsed_s=time.time() - t0,
-                    from_cache=True,
-                    cache_key=ckey,
-                )
-        else:
-            stats.bump("plan_cache_misses")
-
-    for stage in range(max_stages):
-        if prof.peak_bytes <= budget_bytes:
-            break
-        cands = search_chunks(
-            g, prof, window=window, allow_hoist=allow_hoist,
-            dim_blocklist=frozenset(dim_blocklist),
-        )
-        ranked = rank_candidates(g, prof, cands, budget_bytes, hyper)
-        if verbose:
-            print(
-                f"[autochunk] stage {stage}: peak={prof.peak_bytes/2**20:.1f}MiB"
-                f" budget={budget_bytes/2**20:.1f}MiB candidates={len(ranked)}"
-            )
-        applied = None
-        # DP-with-beam: verify the top-`beam` candidates by true re-trace and
-        # keep the best (meets-budget, lowest cost, lowest verified peak).
-        best_key = None
-        cur_metric = _progress_metric(prof)
-        for cand, n, est, cost in ranked[:beam]:
-            try:
-                new_fn = build_chunked_fn(g, cand, n)
-                g2, _ = trace(new_fn, flat_args, weight_argnums=weight_flat)
-                prof2 = estimate_memory(g2)
-            except Exception:
-                continue
-            big_gain = prof2.peak_bytes < prof.peak_bytes * (1.0 - min_gain)
-            if not big_gain and _progress_metric(prof2) >= cur_metric:
-                continue  # no peak gain and no structural progress
-            over = prof2.peak_bytes > budget_bytes
-            key = (
-                (over, cost, prof2.peak_bytes)
-                if not over
-                else (over,) + _progress_metric(prof2) + (cost,)
-            )
-            if best_key is None or key < best_key:
-                best_key = key
-                applied = (cand, n, cost, new_fn, g2, prof2)
-        if applied is None:
-            break
-        cand, n, cost, new_fn, g2, prof2 = applied
-        plan.append(
-            StageRecord(
-                stage=stage,
-                region=(cand.s, cand.e),
-                n_chunks=n,
-                chunk_extent=cand.chunk_extent,
-                n_loop_eqns=len(cand.in_loop),
-                n_hoisted=len(cand.hoisted),
-                cost=cost,
-                peak_before=prof.peak_bytes,
-                peak_after=prof2.peak_bytes,
-            )
-        )
-        plan_stages.append(
-            PlanStage.from_candidate(
-                g, cand, n, cost=cost,
-                peak_before=prof.peak_bytes, peak_after=prof2.peak_bytes,
-            )
-        )
-        cur, g, prof = new_fn, g2, prof2
-
-    final_peak = prof.peak_bytes
-    io_bytes, weight_bytes = prof.io_bytes, prof.weight_bytes
-
-    # Budget annealing: the analytic per-stage estimate is optimistic for
-    # loose budgets (region boundaries that "meet" analytically can verify
-    # over).  When the target is missed, retry the whole pipeline against a
-    # tighter internal budget and keep whichever plan verifies lower.
-    if final_peak > budget_bytes and anneal > 0 and plan:
-        retry = build_autochunk(
-            fn, example_args,
-            budget_bytes=max(budget_bytes // 2, 1),
-            weight_argnums=weight_argnums, hyper=hyper,
-            max_stages=max_stages, beam=beam, window=window,
-            min_gain=min_gain, allow_hoist=allow_hoist,
-            dim_blocklist=dim_blocklist, anneal=anneal - 1, verbose=verbose,
-        )
-        if retry.final_peak < final_peak:
-            cur = retry.flat_fn
-            plan, plan_stages = retry.plan, retry.plan_stages
-            final_peak = retry.final_peak
-            io_bytes, weight_bytes = retry.io_bytes, retry.weight_bytes
-
-    result = _package_result(
-        fn=cur,
-        out_tree_box=out_tree_box,
-        plan=plan,
-        plan_stages=plan_stages,
-        baseline_peak=baseline_peak,
-        final_peak=final_peak,
+    config = ChunkConfig(
+        budget_ratio=budget_ratio,
         budget_bytes=budget_bytes,
-        io_bytes=io_bytes,
-        weight_bytes=weight_bytes,
-        elapsed_s=time.time() - t0,
-        cache_key=ckey,
+        weight_argnums=tuple(weight_argnums),
+        hyper=hyper or CostHyper(),
+        max_stages=max_stages,
+        beam=beam,
+        window=window,
+        min_gain=min_gain,
+        allow_hoist=allow_hoist,
+        dim_blocklist=tuple(dim_blocklist),
+        anneal=anneal,
+        verbose=verbose,
     )
-    if cache is not None and ckey is not None:
-        cache.put(ckey, result.to_chunk_plan())
-    return result
+    cf = ChunkedFunction(fn, config, cache=cache, bucketer=None)
+    return cf.compile(*example_args).result
 
 
-def autochunk(
+def _coerce_config(config: Optional[ChunkConfig], kwargs: dict) -> ChunkConfig:
+    if "memory_budget" in kwargs:
+        # convenience: the paper's scalar budget in the new spelling
+        mb = kwargs.pop("memory_budget")
+        if config is None:
+            return ChunkConfig.from_scalar(mb, **kwargs)
+        kwargs["budget_ratio" if mb <= 1.0 else "budget_bytes"] = (
+            float(mb) if mb <= 1.0 else int(mb)
+        )
+    if config is None:
+        return ChunkConfig(**kwargs)
+    if not isinstance(config, ChunkConfig):
+        raise TypeError(
+            f"config must be a ChunkConfig, got {type(config).__name__}"
+        )
+    return config.with_(**kwargs) if kwargs else config
+
+
+def _legacy_autochunk(
     fn: Callable,
     example_args: Sequence[Any],
     memory_budget: float = 0.5,
     **kwargs,
 ) -> Callable:
-    """Paper-style convenience wrapper.
-
-    ``memory_budget`` <= 1.0 is a ratio of the baseline activation peak;
-    > 1.0 is absolute bytes.  The returned callable carries the full
-    compilation report on ``.autochunk_result``.
-    """
+    """Pre-staged paper-style wrapper (``memory_budget`` <= 1.0 is a ratio
+    of the baseline activation peak; > 1.0 is absolute bytes)."""
     if memory_budget <= 1.0:
         res = build_autochunk(fn, example_args, budget_ratio=memory_budget, **kwargs)
     else:
         res = build_autochunk(fn, example_args, budget_bytes=int(memory_budget), **kwargs)
     res.fn.autochunk_result = res  # type: ignore[attr-defined]
     return res.fn
+
+
+def autochunk(
+    fn: Optional[Callable] = None,
+    config: Optional[ChunkConfig] = None,
+    *legacy_args,
+    cache=None,
+    bucketer=_DEFAULT_BUCKETER,
+    **kwargs,
+):
+    """The AutoChunk transform.
+
+    New (staged) forms — all return a :class:`ChunkedFunction`:
+
+    * ``autochunk(fn, ChunkConfig(budget_ratio=0.4))``
+    * ``autochunk(fn, budget_ratio=0.4)`` — config built from kwargs
+    * ``@autochunk(ChunkConfig(...))`` / ``@autochunk`` — decorator forms
+
+    ``cache`` accepts a :class:`~repro.core.plan.PlanCache` or a directory
+    path; ``bucketer`` a :class:`ShapeBucketer` (default power-of-two
+    sequence buckets) or ``None`` to compile strictly per exact shape.
+
+    Deprecated form (kept so paper-style call sites work): ``autochunk(fn,
+    example_args, memory_budget=0.5, **old_kwargs)`` runs the pipeline
+    eagerly and returns a plain callable carrying ``.autochunk_result``.
+    """
+    if callable(fn) and isinstance(config, (tuple, list)):
+        # legacy: autochunk(fn, example_args[, memory_budget], **old_kwargs)
+        warnings.warn(
+            "autochunk(fn, example_args, memory_budget) is deprecated; use"
+            " autochunk(fn, ChunkConfig(...)) and call (or .trace/.search/"
+            ".compile) the returned ChunkedFunction",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        if legacy_args:
+            kwargs.setdefault("memory_budget", legacy_args[0])
+        memory_budget = kwargs.pop("memory_budget", 0.5)
+        return _legacy_autochunk(
+            fn, config, memory_budget, cache=cache, **kwargs
+        )
+    if legacy_args:
+        raise TypeError(
+            "autochunk() takes at most (fn, config) positionally; pass"
+            " tuning knobs via ChunkConfig or keywords"
+        )
+    if fn is None or isinstance(fn, ChunkConfig):
+        # decorator factory: @autochunk(ChunkConfig(...)) / @autochunk(...)
+        cfg = _coerce_config(fn if isinstance(fn, ChunkConfig) else config, kwargs)
+
+        def decorate(f: Callable) -> ChunkedFunction:
+            return ChunkedFunction(f, cfg, cache=cache, bucketer=bucketer)
+
+        return decorate
+    cfg = _coerce_config(config, kwargs)
+    return ChunkedFunction(fn, cfg, cache=cache, bucketer=bucketer)

@@ -178,6 +178,8 @@ def build_fn_from_plan(
     *,
     weight_argnums: Sequence[int] = (),
     baseline_graph: Graph = None,
+    rescale: bool = False,
+    record: List = None,
 ):
     """Fast path: apply a saved :class:`~repro.core.plan.ChunkPlan` directly.
 
@@ -187,6 +189,13 @@ def build_fn_from_plan(
     loop with :func:`build_chunked_fn`.  No search or selection pass runs.
     A final re-trace + estimation verifies legality; any mismatch raises
     ``PlanApplyError`` so the caller can fall back to a cold compile.
+
+    ``rescale=True`` permits replaying a plan recorded at a different shape
+    in the same bucket (see ``ShapeBucketer``): each stage's chunk extent is
+    retargeted to the traced shapes, keeping the chunk *count*.  When
+    ``record`` is a list, one ``(graph, candidate, n_chunks)`` triple per
+    applied stage is appended — callers use it to re-serialize the plan at
+    the shapes it actually ran at.
 
     Returns ``(final_flat_fn, final_graph, final_profile)``.
     """
@@ -206,14 +215,17 @@ def build_fn_from_plan(
                     f"re-trace before plan stage {stage_i} failed: {e!r}"
                 ) from e
         try:
-            cand = st.to_candidate(g)
-            cur = build_chunked_fn(g, cand, st.n_chunks)
+            cand = st.to_candidate(g, rescale=rescale)
+            n = min(st.n_chunks, cand.chunk_extent) if rescale else st.n_chunks
+            cur = build_chunked_fn(g, cand, n)
         except PlanApplyError:
             raise
         except Exception as e:
             raise PlanApplyError(
                 f"applying plan stage {stage_i} failed: {e!r}"
             ) from e
+        if record is not None:
+            record.append((g, cand, n))
         g = None  # next stage re-traces the rewritten callable
 
     try:

@@ -1,0 +1,222 @@
+"""Compilation configuration: :class:`ChunkConfig` and :class:`ShapeBucketer`.
+
+``ChunkConfig`` consolidates every AutoChunk tuning knob — previously 13
+loose kwargs on ``build_autochunk`` — into one frozen, validated dataclass
+with a stable serialization.  The serialization feeds both
+:func:`~repro.core.plan.plan_cache_key` (exact structural reuse) and the
+shape-bucket keys (reuse across *similar* shapes), so "same config" is a
+well-defined, hashable notion instead of a tuple of defaults scattered
+through call sites.
+
+``ShapeBucketer`` maps tensor dimensions onto a small set of buckets
+(power-of-two by default, or user-supplied sequence-length boundaries).
+Two input signatures that land in the same bucket share one searched
+:class:`~repro.core.plan.ChunkPlan`: the plan found at the first shape is
+replayed (rescaled) for every other shape in the bucket, so serving traffic
+at many sequence lengths pays for one search per bucket rather than one per
+length.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+from .selection import CostHyper
+
+
+def _as_int_tuple(name: str, xs: Sequence[int]) -> Tuple[int, ...]:
+    try:
+        out = tuple(sorted({int(x) for x in xs}))
+    except (TypeError, ValueError) as e:
+        raise ValueError(f"{name} must be a sequence of ints, got {xs!r}") from e
+    if any(x < 0 for x in out):
+        raise ValueError(f"{name} entries must be >= 0, got {xs!r}")
+    return out
+
+
+@dataclass(frozen=True)
+class ChunkConfig:
+    """All AutoChunk tuning knobs, validated and serializable.
+
+    Exactly one of ``budget_ratio`` / ``budget_bytes`` is active; when
+    neither is given the paper's default 50% activation budget applies.
+
+    ``budget_ratio``    activation budget as a fraction of the baseline peak
+    ``budget_bytes``    absolute activation budget
+    ``weight_argnums``  which arguments are parameters (not activations)
+    ``hyper``           selection cost hyper-parameters (:class:`CostHyper`)
+    ``max_stages``      max chunk stages applied per compile
+    ``beam``            candidates verified by true re-trace per stage
+    ``window``          max region width considered by the search
+    ``min_gain``        min fractional peak reduction for a stage to count
+    ``allow_hoist``     hoist chunk-invariant subgraphs out of the loop
+    ``dim_blocklist``   tensor dims never chunked (e.g. a sharded batch axis)
+    ``anneal``          budget-halving retries when the target is missed
+    ``verbose``         per-stage progress printing (not part of the key)
+    """
+
+    budget_ratio: Optional[float] = None
+    budget_bytes: Optional[int] = None
+    weight_argnums: Tuple[int, ...] = (0,)
+    hyper: CostHyper = field(default_factory=CostHyper)
+    max_stages: int = 12
+    beam: int = 4
+    window: int = 48
+    min_gain: float = 0.02
+    allow_hoist: bool = True
+    dim_blocklist: Tuple[int, ...] = ()
+    anneal: int = 2
+    verbose: bool = False
+
+    def __post_init__(self):
+        if self.budget_ratio is not None and self.budget_bytes is not None:
+            raise ValueError(
+                "give at most one of budget_ratio / budget_bytes"
+            )
+        if self.budget_ratio is None and self.budget_bytes is None:
+            object.__setattr__(self, "budget_ratio", 0.5)
+        if self.budget_ratio is not None and not 0.0 < self.budget_ratio <= 1.0:
+            raise ValueError(
+                f"budget_ratio must be in (0, 1], got {self.budget_ratio}"
+            )
+        if self.budget_bytes is not None:
+            if int(self.budget_bytes) < 1:
+                raise ValueError(
+                    f"budget_bytes must be >= 1, got {self.budget_bytes}"
+                )
+            object.__setattr__(self, "budget_bytes", int(self.budget_bytes))
+        for name, lo in (("max_stages", 1), ("beam", 1), ("window", 1),
+                         ("anneal", 0)):
+            v = getattr(self, name)
+            if not isinstance(v, int) or v < lo:
+                raise ValueError(f"{name} must be an int >= {lo}, got {v!r}")
+        if self.min_gain < 0:
+            raise ValueError(f"min_gain must be >= 0, got {self.min_gain}")
+        if not isinstance(self.hyper, CostHyper):
+            raise ValueError(
+                f"hyper must be a CostHyper, got {type(self.hyper).__name__}"
+            )
+        object.__setattr__(
+            self, "weight_argnums",
+            _as_int_tuple("weight_argnums", self.weight_argnums),
+        )
+        object.__setattr__(
+            self, "dim_blocklist",
+            _as_int_tuple("dim_blocklist", self.dim_blocklist),
+        )
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_scalar(cls, budget: float, **kw) -> "ChunkConfig":
+        """The paper's scalar budget: <= 1.0 is a ratio of the baseline
+        activation peak, > 1.0 is absolute bytes."""
+        if budget <= 1.0:
+            return cls(budget_ratio=float(budget), **kw)
+        return cls(budget_bytes=int(budget), **kw)
+
+    def with_(self, **kw) -> "ChunkConfig":
+        """Derived config (same ``.with_`` idiom as the model configs)."""
+        if "budget_bytes" in kw and "budget_ratio" not in kw:
+            kw.setdefault("budget_ratio", None)
+        if "budget_ratio" in kw and "budget_bytes" not in kw:
+            kw.setdefault("budget_bytes", None)
+        return dataclasses.replace(self, **kw)
+
+    def resolve_budget(self, baseline_peak: int) -> int:
+        """Absolute activation budget in bytes for a given baseline peak."""
+        if self.budget_bytes is not None:
+            return self.budget_bytes
+        return int(baseline_peak * self.budget_ratio)
+
+    def search_knobs(self) -> Dict[str, Any]:
+        """The knob dict hashed into :func:`plan_cache_key`.
+
+        The layout is part of the cache-key format: any change to field
+        names or value canonicalization silently invalidates every stored
+        plan, so change it together with ``PLAN_FORMAT_VERSION``.
+        """
+        return {
+            "max_stages": self.max_stages,
+            "beam": self.beam,
+            "window": self.window,
+            "min_gain": self.min_gain,
+            "allow_hoist": self.allow_hoist,
+            "dim_blocklist": sorted(self.dim_blocklist),
+            "anneal": self.anneal,
+        }
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = asdict(self)
+        d.pop("verbose")  # presentation only, never part of identity
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ChunkConfig":
+        d = dict(d)
+        d.pop("verbose", None)
+        hyper = d.pop("hyper", None)
+        if isinstance(hyper, dict):
+            hyper = CostHyper(**hyper)
+        return cls(hyper=hyper or CostHyper(), **{
+            k: tuple(v) if isinstance(v, list) else v for k, v in d.items()
+        })
+
+    def cache_token(self) -> str:
+        """Stable digest of everything that can change a search result."""
+        blob = json.dumps(self.to_dict(), sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(blob.encode()).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Shape bucketing
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeBucketer:
+    """Round tensor dims onto bucket boundaries for plan reuse.
+
+    ``buckets``  explicit ascending boundaries (e.g. ``(128, 256, 1024)``);
+                 a dim maps to the smallest boundary >= itself.  Dims above
+                 the largest boundary fall back to power-of-two rounding.
+                 ``None`` means pure power-of-two buckets.
+    ``min_dim``  dims below this pass through unchanged — small axes
+                 (batch, heads) genuinely change the problem and should not
+                 be merged; sequence-like axes are the ones worth bucketing.
+    """
+
+    buckets: Optional[Tuple[int, ...]] = None
+    min_dim: int = 32
+
+    def __post_init__(self):
+        if self.buckets is not None:
+            bs = tuple(int(b) for b in self.buckets)
+            if not bs or any(b < 1 for b in bs) or list(bs) != sorted(set(bs)):
+                raise ValueError(
+                    "buckets must be strictly ascending positive ints,"
+                    f" got {self.buckets!r}"
+                )
+            object.__setattr__(self, "buckets", bs)
+        if self.min_dim < 1:
+            raise ValueError(f"min_dim must be >= 1, got {self.min_dim}")
+
+    def bucket_dim(self, size: int) -> int:
+        size = int(size)
+        if size < self.min_dim:
+            return size
+        if self.buckets is not None:
+            for b in self.buckets:
+                if size <= b:
+                    return b
+        return 1 << (size - 1).bit_length()
+
+    def bucket_shape(self, shape: Sequence[int]) -> Tuple[int, ...]:
+        return tuple(self.bucket_dim(s) for s in shape)
+
+    def signature(self, avals) -> Tuple[Tuple[Tuple[int, ...], str], ...]:
+        """Bucketed (shape, dtype) signature of a flat aval sequence."""
+        return tuple(
+            (self.bucket_shape(a.shape), str(a.dtype)) for a in avals
+        )

@@ -30,6 +30,7 @@ import hashlib
 import json
 import os
 import tempfile
+import time
 from dataclasses import asdict, dataclass, field
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Tuple
@@ -39,7 +40,10 @@ from jax.extend import core as jex_core
 from .graph import Graph, Var, is_var
 from .search import ChunkCandidate
 
-PLAN_FORMAT_VERSION = 1
+# v2: schema-version mismatches are *rejected* (treated as a cache miss and
+# recompiled) instead of best-effort-applied; bucketed plan aliases live in a
+# ``buckets/`` subdirectory of on-disk caches.
+PLAN_FORMAT_VERSION = 2
 
 
 class PlanApplyError(RuntimeError):
@@ -120,11 +124,18 @@ class PlanStage:
             peak_after=peak_after,
         )
 
-    def to_candidate(self, g: Graph) -> ChunkCandidate:
+    def to_candidate(self, g: Graph, *, rescale: bool = False) -> ChunkCandidate:
         """Rebind this stage's positional names to ``g``'s vars.
 
         Raises :class:`PlanApplyError` when any name or equation index does
         not resolve — the caller falls back to a cold compile.
+
+        With ``rescale=True`` the stored ``chunk_extent`` is allowed to
+        disagree with the traced shapes: if every sliced input agrees on a
+        *different* extent (the same function traced at another sequence
+        length in the same shape bucket), the candidate is rescaled to the
+        observed extent and the chunk count is preserved — chunk *size*
+        scales with the shape, search never re-runs.
         """
         rev = resolve_var_keys(g)
 
@@ -158,11 +169,14 @@ class PlanStage:
                 raise PlanApplyError(
                     f"plan assigns dim {d} to a rank-{len(shape)} var"
                 )
-        for v, d in cand.sliced_in:
-            if v.aval.shape[d] != cand.chunk_extent:
+        extents = {v.aval.shape[d] for v, d in cand.sliced_in}
+        if extents and extents != {cand.chunk_extent}:
+            if not rescale or len(extents) != 1:
                 raise PlanApplyError(
                     "plan chunk extent no longer matches the traced shapes"
+                    f" (stored {cand.chunk_extent}, traced {sorted(extents)})"
                 )
+            cand.chunk_extent = extents.pop()
         return cand
 
 
@@ -187,10 +201,13 @@ class ChunkPlan:
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "ChunkPlan":
-        if d.get("version", 1) > PLAN_FORMAT_VERSION:
+        if d.get("version", 1) != PLAN_FORMAT_VERSION:
+            # any mismatch (older *or* newer) is rejected, never
+            # best-effort-applied: callers treat this as a cache miss and
+            # recompile, which rewrites the entry at the current version
             raise PlanApplyError(
-                f"plan format v{d['version']} is newer than supported"
-                f" v{PLAN_FORMAT_VERSION}"
+                f"plan format v{d.get('version', 1)} does not match"
+                f" supported v{PLAN_FORMAT_VERSION}"
             )
         stages = [
             PlanStage(
@@ -342,16 +359,24 @@ class PlanCache:
 
     The disk layout is one ``<cache_key>.json`` per plan, so caches can be
     pre-built by ``repro.tools.precompile``, shipped with a deployment, and
-    shared between processes (writes are atomic renames).
+    shared between processes (writes are atomic renames).  Shape-bucketed
+    aliases (plans keyed by *bucketed* input signature rather than exact
+    graph structure — see :class:`~repro.core.config.ShapeBucketer`) live in
+    a ``buckets/`` subdirectory and are not counted as cache entries.
     """
+
+    BUCKET_SUBDIR = "buckets"
 
     def __init__(self, path: Optional[Any] = None):
         self._mem: Dict[str, ChunkPlan] = {}
+        self._mem_buckets: Dict[str, ChunkPlan] = {}
         self.path: Optional[Path] = Path(path) if path is not None else None
         if self.path is not None:
             self.path.mkdir(parents=True, exist_ok=True)
         self.hits = 0
         self.misses = 0
+        self.bucket_hits = 0
+        self.bucket_misses = 0
 
     # ------------------------------------------------------------------
     def _disk_path(self, key: str) -> Optional[Path]:
@@ -359,19 +384,28 @@ class PlanCache:
             return None
         return self.path / f"{key}.json"
 
+    def _bucket_disk_path(self, key: str) -> Optional[Path]:
+        if self.path is None:
+            return None
+        return self.path / self.BUCKET_SUBDIR / f"{key}.json"
+
+    @staticmethod
+    def _load_or_none(p: Optional[Path]) -> Optional[ChunkPlan]:
+        if p is None or not p.exists():
+            return None
+        try:
+            return ChunkPlan.load(p)
+        except (OSError, ValueError, KeyError, TypeError, PlanApplyError):
+            # unreadable / foreign-format / wrong-schema-version plan file
+            # -> treat as a miss (the cold compile rewrites it)
+            return None
+
     def get(self, key: str) -> Optional[ChunkPlan]:
         plan = self._mem.get(key)
         if plan is None:
-            p = self._disk_path(key)
-            if p is not None and p.exists():
-                try:
-                    plan = ChunkPlan.load(p)
-                except (OSError, ValueError, KeyError, TypeError, PlanApplyError):
-                    # unreadable/foreign-format plan file -> treat as a miss
-                    # (the cold compile rewrites it)
-                    plan = None
-                if plan is not None:
-                    self._mem[key] = plan
+            plan = self._load_or_none(self._disk_path(key))
+            if plan is not None:
+                self._mem[key] = plan
         if plan is None:
             self.misses += 1
         else:
@@ -381,6 +415,25 @@ class PlanCache:
     def put(self, key: str, plan: ChunkPlan) -> None:
         self._mem[key] = plan
         p = self._disk_path(key)
+        if p is not None:
+            plan.save(p)
+
+    def get_bucket(self, key: str) -> Optional[ChunkPlan]:
+        """Look up a plan by shape-bucket key (never counted in ``len``)."""
+        plan = self._mem_buckets.get(key)
+        if plan is None:
+            plan = self._load_or_none(self._bucket_disk_path(key))
+            if plan is not None:
+                self._mem_buckets[key] = plan
+        if plan is None:
+            self.bucket_misses += 1
+        else:
+            self.bucket_hits += 1
+        return plan
+
+    def put_bucket(self, key: str, plan: ChunkPlan) -> None:
+        self._mem_buckets[key] = plan
+        p = self._bucket_disk_path(key)
         if p is not None:
             plan.save(p)
 
@@ -401,15 +454,89 @@ class PlanCache:
 
     def clear(self, *, disk: bool = False) -> None:
         self._mem.clear()
+        self._mem_buckets.clear()
         if disk and self.path is not None:
             for p in self.path.glob("*.json"):
                 try:
                     p.unlink()
                 except OSError:
                     pass
+            for p in self.path.glob(f"{self.BUCKET_SUBDIR}/*.json"):
+                try:
+                    p.unlink()
+                except OSError:
+                    pass
+
+    def prune(
+        self,
+        *,
+        max_entries: Optional[int] = None,
+        max_age_s: Optional[float] = None,
+        now: Optional[float] = None,
+    ) -> int:
+        """Garbage-collect the cache; returns the number of plans removed.
+
+        ``max_age_s`` drops plans older than this (on-disk mtime); for a
+        purely in-memory cache only ``max_entries`` applies (insertion
+        order, oldest first).  ``max_entries`` then keeps at most that many
+        of the newest plans.  Bucket aliases are pruned by the same policy.
+        """
+        if max_entries is not None and max_entries < 0:
+            raise ValueError(f"max_entries must be >= 0, got {max_entries}")
+        removed = 0
+        now = time.time() if now is None else now
+
+        def _prune_disk(paths: List[Path], mem: Dict[str, ChunkPlan]) -> int:
+            n = 0
+            # snapshot mtimes up front: the directory may be shared with
+            # other processes (including a concurrent prune), so any file
+            # can vanish between listing and stat
+            entries: List[Tuple[float, Path]] = []
+            for p in paths:
+                try:
+                    entries.append((p.stat().st_mtime, p))
+                except OSError:
+                    continue
+            entries.sort(key=lambda e: e[0])
+            drop: List[Path] = []
+            keep: List[Path] = []
+            for mtime, p in entries:
+                if max_age_s is not None and now - mtime > max_age_s:
+                    drop.append(p)
+                else:
+                    keep.append(p)
+            if max_entries is not None and len(keep) > max_entries:
+                drop.extend(keep[: len(keep) - max_entries])
+            for p in drop:
+                try:
+                    p.unlink()
+                    n += 1
+                except OSError:
+                    continue
+                mem.pop(p.stem, None)
+            return n
+
+        if self.path is not None:
+            removed += _prune_disk(list(self.path.glob("*.json")), self._mem)
+            removed += _prune_disk(
+                list(self.path.glob(f"{self.BUCKET_SUBDIR}/*.json")),
+                self._mem_buckets,
+            )
+        elif max_entries is not None:
+            for mem in (self._mem, self._mem_buckets):
+                while len(mem) > max_entries:
+                    mem.pop(next(iter(mem)))
+                    removed += 1
+        return removed
 
     def stats(self) -> Dict[str, int]:
-        return {"hits": self.hits, "misses": self.misses, "entries": len(self)}
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "bucket_hits": self.bucket_hits,
+            "bucket_misses": self.bucket_misses,
+            "entries": len(self),
+        }
 
 
 def as_plan_cache(cache) -> Optional[PlanCache]:

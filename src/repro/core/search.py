@@ -329,6 +329,7 @@ def search_chunks(
     from . import stats
 
     stats.bump("search_calls")
+    stats.bump("search_passes")
     p = prof.peak_eqn if peak_eqn is None else peak_eqn
     n = len(g.eqns)
     lo = max(0, p - window)

@@ -153,6 +153,7 @@ def rank_candidates(
     from . import stats
 
     stats.bump("rank_calls")
+    stats.bump("selection_passes")
     if not cands:
         return []
     total_flops = graph_flops(g)

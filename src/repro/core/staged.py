@@ -1,0 +1,695 @@
+"""Staged AOT compilation: ``ChunkedFunction`` -> Traced -> Planned -> Compiled.
+
+The paper describes AutoChunk as a compiler with distinct passes (estimate ->
+chunk search -> chunk selection -> codegen).  This module makes each pass a
+first-class stage object, mirroring ``jax.jit``'s AOT surface
+(``.trace()/.lower()/.compile()``):
+
+    cf = autochunk(fn, ChunkConfig(budget_ratio=0.4))
+    traced   = cf.trace(*specs)     # jaxpr graph + memory profile
+    planned  = traced.search()      # chunk search + selection -> ChunkPlan
+    compiled = planned.compile()    # codegen (+ the plan's wrapped callable)
+    y = compiled(*args)
+
+Each stage is independently reusable and cacheable: ``Traced`` carries the
+graph and baseline memory profile, ``Planned`` carries the serializable
+:class:`~repro.core.plan.ChunkPlan` (inspectable and persistable before any
+execution), ``CompiledFunction`` the runnable result.  Calling a
+``ChunkedFunction`` directly compiles lazily per input shape.
+
+Shape-bucketed plan reuse: when the ``ChunkedFunction`` has a
+:class:`~repro.core.config.ShapeBucketer` (the default), a plan searched at
+one shape is *replayed* — rescaled chunk extents, zero search/selection
+passes — for every other shape in the same bucket.  ``core.stats`` counters
+(``search_passes``, ``plan_bucket_hits``) make that contract observable.
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax import tree_util
+
+from . import stats
+from .codegen import build_chunked_fn, build_fn_from_plan
+from .config import ChunkConfig, ShapeBucketer
+from .estimation import MemoryProfile, estimate_memory
+from .graph import Graph, trace
+from .plan import ChunkPlan, PlanApplyError, PlanStage, as_plan_cache, plan_cache_key
+from .search import search_chunks
+from .selection import rank_candidates
+
+_DEFAULT_BUCKETER = object()  # sentinel: "use a fresh default ShapeBucketer"
+
+
+# ---------------------------------------------------------------------------
+# Result records (shared with the legacy one-shot API)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class StageRecord:
+    stage: int
+    region: Tuple[int, int]
+    n_chunks: int
+    chunk_extent: int
+    n_loop_eqns: int
+    n_hoisted: int
+    cost: float
+    peak_before: int
+    peak_after: int
+
+
+@dataclass
+class AutoChunkResult:
+    """A chunked callable plus the full compilation report."""
+
+    fn: Callable                      # original signature
+    flat_fn: Callable                 # flat leaves -> flat leaves
+    plan: List[StageRecord]
+    baseline_peak: int
+    final_peak: int
+    budget_bytes: int
+    io_bytes: int
+    weight_bytes: int
+    elapsed_s: float = 0.0
+    plan_stages: List[PlanStage] = field(default_factory=list)
+    from_cache: bool = False
+    cache_key: Optional[str] = None
+
+    def to_chunk_plan(self) -> ChunkPlan:
+        """Detach the compilation into a serializable :class:`ChunkPlan`."""
+        return ChunkPlan(
+            cache_key=self.cache_key or "",
+            budget_bytes=self.budget_bytes,
+            baseline_peak=self.baseline_peak,
+            final_peak=self.final_peak,
+            stages=list(self.plan_stages),
+            meta={
+                "io_bytes": self.io_bytes,
+                "weight_bytes": self.weight_bytes,
+                "compile_s": round(self.elapsed_s, 3),
+            },
+        )
+
+    @property
+    def reduction(self) -> float:
+        if self.baseline_peak == 0:
+            return 0.0
+        return 1.0 - self.final_peak / self.baseline_peak
+
+    def report(self) -> str:
+        lines = [
+            "AutoChunk plan:",
+            f"  baseline peak activation: {self.baseline_peak/2**20:.2f} MiB",
+            f"  budget:                   {self.budget_bytes/2**20:.2f} MiB",
+            f"  final peak activation:    {self.final_peak/2**20:.2f} MiB"
+            f"  ({self.reduction*100:.1f}% reduction)",
+            f"  io bytes: {self.io_bytes/2**20:.2f} MiB,"
+            f" weights: {self.weight_bytes/2**20:.2f} MiB",
+            f"  compile time: {self.elapsed_s:.2f}s, stages: {len(self.plan)}"
+            + (" [from cache]" if self.from_cache else ""),
+        ]
+        for r in self.plan:
+            lines.append(
+                f"    stage {r.stage}: region [{r.region[0]},{r.region[1]}]"
+                f" n={r.n_chunks} (extent {r.chunk_extent})"
+                f" loop_eqns={r.n_loop_eqns} hoisted={r.n_hoisted}"
+                f" peak {r.peak_before/2**20:.1f} -> {r.peak_after/2**20:.1f} MiB"
+                f" cost={r.cost:.3f}"
+            )
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Shared plumbing
+# ---------------------------------------------------------------------------
+
+def _progress_metric(prof: MemoryProfile):
+    """Lexicographic progress: peak, #equations at >=99% of peak, then the
+    mass of the top-8 live sets.  Repeated layer stacks tie on raw peak, so
+    a stage that flattens one of several equal peaks must still count as
+    progress (the next stage attacks the remaining ones)."""
+    peak = prof.peak_bytes
+    near = sum(1 for b in prof.per_eqn_bytes if b >= 0.99 * peak)
+    top = sum(sorted(prof.per_eqn_bytes)[-8:])
+    return (peak, near, top)
+
+
+def _flatten_spec(example_args: Sequence[Any], weight_argnums: Sequence[int]):
+    flat, in_tree = tree_util.tree_flatten(tuple(example_args))
+    counts = [len(tree_util.tree_leaves(a)) for a in example_args]
+    weight_flat: List[int] = []
+    pos = 0
+    for i, c in enumerate(counts):
+        if i in weight_argnums:
+            weight_flat.extend(range(pos, pos + c))
+        pos += c
+    return flat, in_tree, weight_flat
+
+
+def _leaf_aval(x) -> Tuple[Tuple[int, ...], str]:
+    if hasattr(x, "shape") and hasattr(x, "dtype"):
+        return tuple(int(s) for s in x.shape), str(x.dtype)
+    import numpy as np
+
+    arr = np.asarray(x)
+    return tuple(arr.shape), str(arr.dtype)
+
+
+def _package_result(
+    *,
+    fn: Callable,
+    out_tree_box: List[Any],
+    plan: List[StageRecord],
+    plan_stages: List[PlanStage],
+    baseline_peak: int,
+    final_peak: int,
+    budget_bytes: int,
+    io_bytes: int,
+    weight_bytes: int,
+    elapsed_s: float,
+    from_cache: bool = False,
+    cache_key: Optional[str] = None,
+) -> AutoChunkResult:
+    """Wrap a flat callable back into the original pytree signature."""
+    final_flat = fn
+
+    def wrapped(*args):
+        leaves, _ = tree_util.tree_flatten(tuple(args))
+        out_leaves = final_flat(*leaves)
+        return tree_util.tree_unflatten(out_tree_box[0], list(out_leaves))
+
+    return AutoChunkResult(
+        fn=wrapped,
+        flat_fn=final_flat,
+        plan=plan,
+        baseline_peak=baseline_peak,
+        final_peak=final_peak,
+        budget_bytes=budget_bytes,
+        io_bytes=io_bytes,
+        weight_bytes=weight_bytes,
+        elapsed_s=elapsed_s,
+        plan_stages=plan_stages,
+        from_cache=from_cache,
+        cache_key=cache_key,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The search pipeline (the paper's chunk-search + chunk-selection passes)
+# ---------------------------------------------------------------------------
+
+def _search_loop(
+    flat_fn: Callable,
+    flat_args: Sequence[Any],
+    weight_flat: Sequence[int],
+    g: Graph,
+    prof: MemoryProfile,
+    budget_bytes: int,
+    config: ChunkConfig,
+):
+    """Greedy staged search with beam verification (paper Alg. 1 driver)."""
+    cur: Callable = flat_fn
+    records: List[StageRecord] = []
+    pstages: List[PlanStage] = []
+    for stage in range(config.max_stages):
+        if prof.peak_bytes <= budget_bytes:
+            break
+        cands = search_chunks(
+            g, prof, window=config.window, allow_hoist=config.allow_hoist,
+            dim_blocklist=frozenset(config.dim_blocklist),
+        )
+        ranked = rank_candidates(g, prof, cands, budget_bytes, config.hyper)
+        if config.verbose:
+            print(
+                f"[autochunk] stage {stage}: peak={prof.peak_bytes/2**20:.1f}MiB"
+                f" budget={budget_bytes/2**20:.1f}MiB candidates={len(ranked)}"
+            )
+        applied = None
+        # DP-with-beam: verify the top-`beam` candidates by true re-trace and
+        # keep the best (meets-budget, lowest cost, lowest verified peak).
+        best_key = None
+        cur_metric = _progress_metric(prof)
+        for cand, n, est, cost in ranked[: config.beam]:
+            try:
+                new_fn = build_chunked_fn(g, cand, n)
+                g2, _ = trace(new_fn, flat_args, weight_argnums=weight_flat)
+                prof2 = estimate_memory(g2)
+            except Exception:
+                continue
+            big_gain = prof2.peak_bytes < prof.peak_bytes * (1.0 - config.min_gain)
+            if not big_gain and _progress_metric(prof2) >= cur_metric:
+                continue  # no peak gain and no structural progress
+            over = prof2.peak_bytes > budget_bytes
+            key = (
+                (over, cost, prof2.peak_bytes)
+                if not over
+                else (over,) + _progress_metric(prof2) + (cost,)
+            )
+            if best_key is None or key < best_key:
+                best_key = key
+                applied = (cand, n, cost, new_fn, g2, prof2)
+        if applied is None:
+            break
+        cand, n, cost, new_fn, g2, prof2 = applied
+        records.append(
+            StageRecord(
+                stage=stage,
+                region=(cand.s, cand.e),
+                n_chunks=n,
+                chunk_extent=cand.chunk_extent,
+                n_loop_eqns=len(cand.in_loop),
+                n_hoisted=len(cand.hoisted),
+                cost=cost,
+                peak_before=prof.peak_bytes,
+                peak_after=prof2.peak_bytes,
+            )
+        )
+        pstages.append(
+            PlanStage.from_candidate(
+                g, cand, n, cost=cost,
+                peak_before=prof.peak_bytes, peak_after=prof2.peak_bytes,
+            )
+        )
+        cur, g, prof = new_fn, g2, prof2
+    return cur, g, prof, records, pstages
+
+
+def _search_with_anneal(
+    flat_fn, flat_args, weight_flat, g0, prof0, budget_bytes, config
+):
+    """Search, then budget-anneal: the analytic per-stage estimate is
+    optimistic for loose budgets, so a missed target retries the whole
+    pipeline against a tighter internal budget and keeps whichever plan
+    verifies lower."""
+    cur, g, prof, records, pstages = _search_loop(
+        flat_fn, flat_args, weight_flat, g0, prof0, budget_bytes, config
+    )
+    if prof.peak_bytes > budget_bytes and config.anneal > 0 and pstages:
+        retry = _search_with_anneal(
+            flat_fn, flat_args, weight_flat, g0, prof0,
+            max(budget_bytes // 2, 1),
+            config.with_(anneal=config.anneal - 1),
+        )
+        if retry[2].peak_bytes < prof.peak_bytes:
+            return retry
+    return cur, g, prof, records, pstages
+
+
+# ---------------------------------------------------------------------------
+# Stage objects
+# ---------------------------------------------------------------------------
+
+class Traced:
+    """Stage 1: traced graph + baseline memory profile (the estimate pass).
+
+    Produced by :meth:`ChunkedFunction.trace`; nothing is materialized —
+    example args may be arrays or ``ShapeDtypeStruct``s.
+    """
+
+    def __init__(self, cf: "ChunkedFunction", example_args: Sequence[Any]):
+        self.cf = cf
+        config = cf.config
+        self._t0 = time.time()
+        self.flat_args, self.in_tree, self.weight_flat = _flatten_spec(
+            example_args, config.weight_argnums
+        )
+        self.out_tree_box: List[Any] = [None]
+        in_tree, out_tree_box, fn = self.in_tree, self.out_tree_box, cf.fn
+
+        def flat_fn(*leaves):
+            args = tree_util.tree_unflatten(in_tree, leaves)
+            out = fn(*args)
+            out_leaves, out_tree = tree_util.tree_flatten(out)
+            out_tree_box[0] = out_tree
+            return tuple(out_leaves)
+
+        self.flat_fn = flat_fn
+        self.graph, _ = trace(
+            flat_fn, self.flat_args, weight_argnums=self.weight_flat
+        )
+        self.profile: MemoryProfile = estimate_memory(self.graph)
+        self.baseline_peak: int = self.profile.peak_bytes
+        self.budget_bytes: int = config.resolve_budget(self.baseline_peak)
+
+    # -- inspection ---------------------------------------------------------
+    @property
+    def memory_profile(self) -> MemoryProfile:
+        return self.profile
+
+    def cache_key(self) -> str:
+        """Exact structural plan-cache key for this trace + config."""
+        config = self.cf.config
+        return plan_cache_key(
+            self.graph, self.budget_bytes, config.hyper, config.search_knobs()
+        )
+
+    def bucket_key(self) -> Optional[str]:
+        """Shape-bucket key (None when bucketing is disabled)."""
+        bucketer = self.cf.bucketer
+        if bucketer is None:
+            return None
+        fn = self.cf.fn
+        doc = {
+            "fn": f"{getattr(fn, '__module__', '?')}."
+                  f"{getattr(fn, '__qualname__', repr(fn))}",
+            "tree": str(self.in_tree),
+            "weights": list(self.weight_flat),
+            "sig": [
+                [list(bucketer.bucket_shape(shape)), dtype]
+                for shape, dtype in map(_leaf_aval, self.flat_args)
+            ],
+            "config": self.cf.config.cache_token(),
+        }
+        blob = json.dumps(doc, sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(blob.encode()).hexdigest()
+
+    # -- stage transition ---------------------------------------------------
+    def search(self) -> "Planned":
+        """Run chunk search + selection (or replay a cached/bucketed plan).
+
+        Lookup order: exact structural key in the plan cache, then the
+        shape bucket (same function + config, a *similar* shape).  Either
+        hit replays with zero search/selection passes; replay failures fall
+        through to the cold pipeline.
+        """
+        cf, config = self.cf, self.cf.config
+        cache, ckey = cf.cache, self.cache_key()
+
+        if cache is not None:
+            saved = cache.get(ckey)
+            if saved is not None:
+                stats.bump("plan_cache_hits")
+                planned = self._replay(saved, rescale=False)
+                if planned is not None:
+                    return planned
+            else:
+                stats.bump("plan_cache_misses")
+
+        bkey = self.bucket_key()
+        if bkey is not None:
+            saved = cf._bucket_plans.get(bkey)
+            if saved is None and cache is not None:
+                saved = cache.get_bucket(bkey)
+            planned = (
+                self._replay(saved, rescale=True) if saved is not None else None
+            )
+            if planned is not None:
+                # a hit is only a hit once the replay validated — failed or
+                # rejected replays fall through to the search and count as
+                # misses, so "bucket hit" always implies zero search passes
+                stats.bump("plan_bucket_hits")
+                cf.counters["bucket_hits"] += 1
+                if cache is not None:  # exact-hit next time at this shape
+                    cache.put(ckey, planned.plan)
+                return planned
+            stats.bump("plan_bucket_misses")
+            cf.counters["bucket_misses"] += 1
+
+        cur, g, prof, records, pstages = _search_with_anneal(
+            self.flat_fn, self.flat_args, self.weight_flat,
+            self.graph, self.profile, self.budget_bytes, config,
+        )
+        plan = ChunkPlan(
+            cache_key=ckey,
+            budget_bytes=self.budget_bytes,
+            baseline_peak=self.baseline_peak,
+            final_peak=prof.peak_bytes,
+            stages=pstages,
+            meta={
+                "io_bytes": prof.io_bytes,
+                "weight_bytes": prof.weight_bytes,
+                "compile_s": round(time.time() - self._t0, 3),
+            },
+        )
+        if cache is not None:
+            cache.put(ckey, plan)
+        if bkey is not None:
+            cf._bucket_plans[bkey] = plan
+            if cache is not None:
+                cache.put_bucket(bkey, plan)
+        return Planned(
+            traced=self, plan=plan, records=records,
+            flat_fn=cur, graph=g, profile=prof,
+            from_cache=False, bucket_hit=False,
+        )
+
+    def _replay(self, saved: ChunkPlan, *, rescale: bool) -> Optional["Planned"]:
+        """Apply a stored plan to this trace; None means fall back to search."""
+        rec: List[Tuple[Graph, Any, int]] = []
+        try:
+            fn, g, prof = build_fn_from_plan(
+                self.flat_fn, self.flat_args, saved,
+                weight_argnums=self.weight_flat,
+                baseline_graph=self.graph,
+                rescale=rescale,
+                record=rec,
+            )
+        except PlanApplyError:
+            stats.bump("plan_replay_failures")
+            return None
+        if rescale:
+            # quality guard, shape-invariant: accept the rescaled replay if
+            # it fits this shape's budget, or at least achieves (about) the
+            # relative reduction the plan achieved at its home shape — a
+            # fresh search would not do materially better there either.
+            ok = prof.peak_bytes <= self.budget_bytes
+            if not ok and saved.baseline_peak > 0:
+                home_ratio = saved.final_peak / saved.baseline_peak
+                ok = prof.peak_bytes <= self.baseline_peak * home_ratio * 1.05
+            if not ok:
+                stats.bump("plan_bucket_rejects")
+                return None
+        if rescale:
+            # per-stage peaks at *this* shape: each recorded graph is the
+            # state the stage was applied on, the next graph (or the final
+            # profile) is the state after it
+            peaks = [estimate_memory(gi).peak_bytes for gi, _, _ in rec]
+            peaks.append(prof.peak_bytes)
+            pstages = [
+                PlanStage.from_candidate(
+                    gi, cand, n, cost=saved.stages[i].cost,
+                    peak_before=peaks[i], peak_after=peaks[i + 1],
+                )
+                for i, (gi, cand, n) in enumerate(rec)
+            ]
+            meta = dict(saved.meta)
+            meta["rescaled_from"] = saved.cache_key
+            plan = ChunkPlan(
+                cache_key=self.cache_key(),
+                budget_bytes=self.budget_bytes,
+                baseline_peak=self.baseline_peak,
+                final_peak=prof.peak_bytes,
+                stages=pstages,
+                meta=meta,
+            )
+        else:
+            plan = saved
+        records = [
+            StageRecord(
+                stage=i,
+                region=(st.s, st.e),
+                n_chunks=st.n_chunks,
+                chunk_extent=st.chunk_extent,
+                n_loop_eqns=len(st.in_loop),
+                n_hoisted=len(st.hoisted),
+                cost=st.cost,
+                peak_before=st.peak_before,
+                peak_after=st.peak_after,
+            )
+            for i, st in enumerate(plan.stages)
+        ]
+        return Planned(
+            traced=self, plan=plan, records=records,
+            flat_fn=fn, graph=g, profile=prof,
+            from_cache=True, bucket_hit=rescale,
+        )
+
+
+@dataclass
+class Planned:
+    """Stage 2: a finished chunk search — the :class:`ChunkPlan` plus the
+    verified rewritten callable.  Inspect/serialize the plan (``.plan``,
+    ``.save()``) before deciding to pay for codegen + jit."""
+
+    traced: Traced
+    plan: ChunkPlan
+    records: List[StageRecord]
+    flat_fn: Callable
+    graph: Graph
+    profile: MemoryProfile
+    from_cache: bool = False
+    bucket_hit: bool = False
+
+    @property
+    def final_peak(self) -> int:
+        return self.profile.peak_bytes
+
+    @property
+    def baseline_peak(self) -> int:
+        return self.traced.baseline_peak
+
+    @property
+    def budget_bytes(self) -> int:
+        return self.traced.budget_bytes
+
+    def save(self, path) -> None:
+        self.plan.save(path)
+
+    def compile(self) -> "CompiledFunction":
+        """Stage 3: package the plan's callable (codegen already verified)."""
+        t = self.traced
+        result = _package_result(
+            fn=self.flat_fn,
+            out_tree_box=t.out_tree_box,
+            plan=self.records,
+            plan_stages=list(self.plan.stages),
+            baseline_peak=t.baseline_peak,
+            final_peak=self.profile.peak_bytes,
+            budget_bytes=t.budget_bytes,
+            io_bytes=self.profile.io_bytes,
+            weight_bytes=self.profile.weight_bytes,
+            elapsed_s=time.time() - t._t0,
+            from_cache=self.from_cache,
+            cache_key=self.plan.cache_key,
+        )
+        return CompiledFunction(result, bucket_hit=self.bucket_hit)
+
+
+class CompiledFunction:
+    """Stage 3 product: the chunked executable with its compilation report.
+
+    Calling it jits lazily; ``.fn`` is the un-jitted callable (compose it
+    with ``jax.jit``/``shard_map``/``grad`` yourself when preferred).
+    """
+
+    def __init__(self, result: AutoChunkResult, *, bucket_hit: bool = False):
+        self.result = result
+        self.fn = result.fn
+        self.bucket_hit = bucket_hit
+        self.autochunk_result = result  # legacy attribute location
+        self._jitted: Optional[Callable] = None
+
+    @property
+    def from_cache(self) -> bool:
+        return self.result.from_cache
+
+    @property
+    def final_peak(self) -> int:
+        return self.result.final_peak
+
+    def report(self) -> str:
+        return self.result.report()
+
+    def __call__(self, *args):
+        if self._jitted is None:
+            self._jitted = jax.jit(self.fn)
+        return self._jitted(*args)
+
+
+# ---------------------------------------------------------------------------
+# The transform
+# ---------------------------------------------------------------------------
+
+class ChunkedFunction:
+    """``autochunk(fn, config)``: a function transformed for chunked execution.
+
+    Three ways to run it:
+
+    * **Direct call** — ``cf(*args)`` compiles lazily for the concrete input
+      shapes (one compile per shape bucket, replayed for sibling shapes) and
+      executes.
+    * **Staged AOT** — ``cf.trace(*specs).search().compile()`` exposes each
+      compiler pass; specs may be ``ShapeDtypeStruct``s so nothing is
+      materialized.
+    * **Decorator** — ``@autochunk(ChunkConfig(...))`` above a function
+      definition.
+    """
+
+    def __init__(
+        self,
+        fn: Callable,
+        config: Optional[ChunkConfig] = None,
+        *,
+        cache=None,
+        bucketer=_DEFAULT_BUCKETER,
+    ):
+        if not callable(fn):
+            raise TypeError(f"autochunk target must be callable, got {fn!r}")
+        self.fn = fn
+        self.config = config if config is not None else ChunkConfig()
+        if not isinstance(self.config, ChunkConfig):
+            raise TypeError(
+                f"config must be a ChunkConfig, got {type(self.config).__name__}"
+            )
+        self.cache = as_plan_cache(cache)
+        self.bucketer: Optional[ShapeBucketer] = (
+            ShapeBucketer() if bucketer is _DEFAULT_BUCKETER else bucketer
+        )
+        self._bucket_plans: Dict[str, ChunkPlan] = {}
+        self._compiled: Dict[Any, CompiledFunction] = {}
+        self.counters: Dict[str, int] = {
+            "calls": 0,
+            "compiles": 0,
+            "shape_hits": 0,
+            "bucket_hits": 0,
+            "bucket_misses": 0,
+        }
+        functools.update_wrapper(self, fn, updated=())
+
+    # -- staged AOT ---------------------------------------------------------
+    def trace(self, *example_args) -> Traced:
+        """Stage 1: trace + memory estimate at the given (abstract) args."""
+        if not example_args:
+            raise ValueError("trace() needs at least one example argument")
+        return Traced(self, example_args)
+
+    def compile(self, *example_args) -> CompiledFunction:
+        """One-shot AOT: ``trace -> search -> compile`` for these args."""
+        return self.trace(*example_args).search().compile()
+
+    # -- direct call --------------------------------------------------------
+    def _shape_key(self, args) -> Any:
+        leaves, treedef = tree_util.tree_flatten(tuple(args))
+        return (str(treedef), tuple(_leaf_aval(x) for x in leaves))
+
+    def __call__(self, *args):
+        self.counters["calls"] += 1
+        key = self._shape_key(args)
+        compiled = self._compiled.get(key)
+        if compiled is None:
+            self.counters["compiles"] += 1
+            compiled = self.compile(*args)
+            self._compiled[key] = compiled
+        else:
+            self.counters["shape_hits"] += 1
+        return compiled(*args)
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def autochunk_result(self) -> Optional[AutoChunkResult]:
+        """Report of the most recent compile (legacy attribute location)."""
+        if not self._compiled:
+            return None
+        return next(reversed(self._compiled.values())).result
+
+    def stats(self) -> Dict[str, Any]:
+        out = dict(self.counters)
+        out["compiled_shapes"] = len(self._compiled)
+        out["bucket_plans"] = len(self._bucket_plans)
+        if self.cache is not None:
+            out["plan_cache"] = self.cache.stats()
+        return out
+
+    def __repr__(self) -> str:
+        name = getattr(self.fn, "__name__", repr(self.fn))
+        return (
+            f"ChunkedFunction({name},"
+            f" budget={self.config.budget_bytes or self.config.budget_ratio},"
+            f" shapes={len(self._compiled)})"
+        )

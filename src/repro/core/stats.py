@@ -13,11 +13,21 @@ _COUNTERS: Dict[str, int] = {
     "estimate_calls": 0,
     "search_calls": 0,
     "rank_calls": 0,
+    # aliases bumped alongside search_calls/rank_calls: one "pass" per
+    # invocation of the paper's chunk-search / chunk-selection stage.  The
+    # staged-API contract (bucket hits replay with zero passes) is stated
+    # and tested in these terms.
+    "search_passes": 0,
+    "selection_passes": 0,
     "codegen_calls": 0,
     "plan_cache_hits": 0,
     "plan_cache_misses": 0,
     "plan_replays": 0,
     "plan_replay_failures": 0,
+    # shape-bucketed reuse (see core.config.ShapeBucketer)
+    "plan_bucket_hits": 0,
+    "plan_bucket_misses": 0,
+    "plan_bucket_rejects": 0,
 }
 
 

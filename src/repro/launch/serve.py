@@ -1,7 +1,14 @@
 """Serving driver: batched requests through the ServeEngine.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch gpt-paper --local \
-      --requests 8 --max-new 16 [--autochunk 0.3]
+  python -m repro.launch.serve --arch gpt-paper --local \
+      --requests 8 --max-new 16 [--autochunk 0.3] [--plan-cache plans/]
+
+``--plan-cache DIR`` points the engine at an on-disk plan cache (e.g. one
+pre-built by ``python -m repro.tools.precompile``): the first run searches
+and stores the chunk plan, every later run — or any other process sharing
+the directory — starts warm, replaying the plan with zero search passes.
+The cache status line (``plan cache: warm|cold``) is asserted by CI's
+serving smoke step.
 """
 from __future__ import annotations
 
@@ -16,7 +23,7 @@ from ..models import model as M
 from ..serving import Request, ServeEngine
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--local", action="store_true")
@@ -26,8 +33,15 @@ def main():
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--autochunk", type=float, default=None)
+    ap.add_argument("--plan-cache", type=str, default=None,
+                    help="on-disk plan cache directory (shared across runs)")
+    ap.add_argument("--bucket-lens", type=str, default=None,
+                    help="comma-separated seq-len bucket boundaries for plan"
+                         " reuse across max-len reconfigurations")
+    ap.add_argument("--sample", action="store_true",
+                    help="sample from the logits instead of greedy argmax")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.local:
@@ -35,11 +49,30 @@ def main():
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
     rng = np.random.default_rng(args.seed)
 
+    bucket_lens = (
+        [int(s) for s in args.bucket_lens.split(",") if s]
+        if args.bucket_lens else None
+    )
+    t_build0 = time.time()
     engine = ServeEngine(
         cfg, params,
         max_batch=args.max_batch, max_len=args.max_len,
         autochunk_budget=args.autochunk,
+        plan_cache=args.plan_cache,
+        bucket_lens=bucket_lens,
+        greedy=not args.sample,
+        seed=args.seed,
     )
+    t_build = time.time() - t_build0
+    if args.autochunk is not None:
+        res = engine.autochunk_result
+        state = "warm" if res.from_cache else "cold"
+        print(f"[serve] engine built in {t_build:.2f}s;"
+              f" plan cache: {state}"
+              f" (stages={len(res.plan)},"
+              f" peak {res.baseline_peak/2**20:.1f} ->"
+              f" {res.final_peak/2**20:.1f} MiB)")
+
     t0 = time.time()
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size, args.prompt_len).tolist()
@@ -49,6 +82,8 @@ def main():
     toks = sum(len(r.generated) for r in done)
     print(f"[serve] {len(done)} requests, {toks} tokens in {dt:.2f}s"
           f" ({toks/dt:.1f} tok/s, {engine.n_decode_steps} decode waves)")
+    if engine.plan_cache is not None:
+        print(f"[serve] plan cache stats: {engine.plan_cache.stats()}")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.generated[:8]}...")
 

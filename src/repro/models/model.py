@@ -240,21 +240,23 @@ _AC_CACHE: Dict[Any, Any] = {}
 def _maybe_autochunk(cfg, tag: str, fn, args):
     if not cfg.autochunk_budget:
         return fn
-    key = (cfg.name, cfg.autochunk_budget, tag) + tuple(
-        (tuple(a.shape), str(a.dtype)) for a in jax.tree.leaves(args)
-    )
-    if key not in _AC_CACHE:
-        from ..core import autochunk as _autochunk
+    from ..core import ChunkConfig, ChunkedFunction
 
-        specs = jax.tree.map(
-            lambda t: jax.ShapeDtypeStruct(t.shape, t.dtype), args
-        )
-        _AC_CACHE[key] = _autochunk(
-            fn, specs, memory_budget=cfg.autochunk_budget, weight_argnums=(0,),
+    # one ChunkedFunction per (config, budget, block): it compiles lazily per
+    # input shape and replays one searched plan across every sequence length
+    # in the same bucket, so a length sweep pays a single search.  The full
+    # (frozen, hashable) cfg is part of the key because ``fn`` closes over
+    # it — two reduced variants sharing a name must not share closures.
+    key = (cfg.name, cfg.autochunk_budget, tag, cfg)
+    if key not in _AC_CACHE:
+        chunk_cfg = ChunkConfig.from_scalar(
+            cfg.autochunk_budget,
+            weight_argnums=(0,),
             # dim 0 of every activation is the data-parallel batch axis;
             # chunking it would fight the mesh sharding (see core/search.py)
             dim_blocklist=(0,),
         )
+        _AC_CACHE[key] = ChunkedFunction(fn, chunk_cfg)
     return _AC_CACHE[key]
 
 

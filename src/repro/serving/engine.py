@@ -16,7 +16,10 @@ engine warms a :class:`~repro.core.plan.PlanCache` at construction (pass
 pre-built by ``python -m repro.tools.precompile``).  ``reconfigure()``
 rebuilds the slot layout for a new (max_batch, max_len) and reuses any
 previously compiled plan for that shape — a warm reconfiguration skips the
-search/selection passes entirely.
+search/selection passes entirely.  The decode wave compiles through the
+staged AOT API (one ``ChunkedFunction`` for the engine's lifetime), so a
+reconfiguration to a max_len in an already-seen *bucket* (``bucket_lens``,
+default power-of-two) also replays, with rescaled chunk extents.
 """
 from __future__ import annotations
 
@@ -66,9 +69,11 @@ class ServeEngine:
         max_len: int = 256,
         autochunk_budget: Optional[float] = None,
         plan_cache=None,
+        bucket_lens: Optional[Any] = None,
         greedy: bool = True,
         seed: int = 0,
     ):
+        from ..core import ShapeBucketer
         from ..core.plan import PlanCache, as_plan_cache
 
         self.cfg = cfg
@@ -85,7 +90,14 @@ class ServeEngine:
         self.plan_cache = as_plan_cache(plan_cache)
         if self.plan_cache is None and autochunk_budget is not None:
             self.plan_cache = PlanCache()
+        # bucketed plan reuse: reconfigure() to a max_len in an already-seen
+        # bucket replays that bucket's plan (zero search passes) instead of
+        # searching the new length from scratch
+        self.bucketer = ShapeBucketer(
+            buckets=tuple(bucket_lens) if bucket_lens else None
+        )
         self.autochunk_result = None
+        self._chunked_fn = None
 
         self.waiting: List[Request] = []
         self.finished: List[Request] = []
@@ -118,21 +130,28 @@ class ServeEngine:
 
         decode_wave = jax.vmap(_row_decode)
         if self.autochunk_budget is not None:
-            from ..core import autochunk
+            from ..core import ChunkConfig, ChunkedFunction
 
+            if self._chunked_fn is None:
+                # one transform for the engine's lifetime: reconfigure()
+                # recompiles through it, reusing exact or bucketed plans
+                self._chunked_fn = ChunkedFunction(
+                    decode_wave,
+                    ChunkConfig.from_scalar(
+                        self.autochunk_budget, weight_argnums=()
+                    ),
+                    cache=self.plan_cache,
+                    bucketer=self.bucketer,
+                )
             tok_spec = jax.ShapeDtypeStruct((max_batch,), jnp.int32)
             pos_spec = jax.ShapeDtypeStruct((max_batch,), jnp.int32)
             cache_spec = jax.tree.map(
                 lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.cache
             )
-            decode_wave = autochunk(
-                decode_wave,
-                (cache_spec, tok_spec, pos_spec),
-                memory_budget=self.autochunk_budget,
-                weight_argnums=(),
-                cache=self.plan_cache,
-            )
-            self.autochunk_result = decode_wave.autochunk_result
+            # staged AOT: trace -> search (plan, cache/bucket-aware) -> compile
+            compiled = self._chunked_fn.compile(cache_spec, tok_spec, pos_spec)
+            self.autochunk_result = compiled.result
+            decode_wave = compiled.fn
         self._decode_wave = jax.jit(decode_wave)
         self._prefill = jax.jit(
             lambda batch: M.prefill(self.cfg, self.params, batch, self.max_len)
@@ -177,7 +196,14 @@ class ServeEngine:
             self.cache = jax.tree.map(
                 lambda full, r: full.at[slot].set(r), self.cache, cache1
             )
-            first = int(jnp.argmax(logits[0, -1]))
+            # first token follows the engine's sampling mode, same as step():
+            # greedy argmax, otherwise a categorical draw from the prefill
+            # logits with the engine PRNG key
+            if self.greedy:
+                first = int(jnp.argmax(logits[0, -1]))
+            else:
+                self.key, sub = jax.random.split(self.key)
+                first = int(jax.random.categorical(sub, logits[0, -1]))
             req.generated.append(first)
             req.first_token_at = time.time()
             self.slot_req[slot] = req

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import REGISTRY, get_config
-from ..core import build_autochunk
+from ..core import ChunkConfig, ChunkedFunction
 from ..core.plan import PlanCache
 from ..models import model as M
 
@@ -69,22 +69,22 @@ def precompile_one(
         return M.forward(cfg, params, batch_d)[0]
 
     t0 = time.time()
-    res = build_autochunk(
-        fwd,
-        (param_specs, batch_specs),
-        budget_ratio=budget,
-        cache=cache,
-        verbose=verbose,
+    # staged AOT: precompiling only needs trace -> search — the searched
+    # ChunkPlan is the deployment artifact; serving processes pay codegen
+    # (cheap) at start-up, never the search
+    cf = ChunkedFunction(
+        fwd, ChunkConfig(budget_ratio=budget, verbose=verbose), cache=cache
     )
+    planned = cf.trace(param_specs, batch_specs).search()
     return {
         "config": name,
         "seq": seq,
         "budget": budget,
-        "cached": res.from_cache,
-        "stages": len(res.plan),
-        "baseline_mib": res.baseline_peak / 2**20,
-        "final_mib": res.final_peak / 2**20,
-        "key": res.cache_key,
+        "cached": planned.from_cache,
+        "stages": len(planned.plan.stages),
+        "baseline_mib": planned.baseline_peak / 2**20,
+        "final_mib": planned.final_peak / 2**20,
+        "key": planned.plan.cache_key,
         "elapsed_s": time.time() - t0,
     }
 

@@ -155,6 +155,32 @@ def test_engine_plan_cache_and_reconfigure(setup, tmp_path):
     e2.run()
 
 
+def test_admit_samples_first_token_when_not_greedy(setup):
+    """Regression: _admit() used to argmax the first token even with
+    greedy=False; it must draw from the prefill logits with the engine PRNG
+    key, exactly like step() does for subsequent tokens."""
+    cfg, params = setup
+    prompt = [3, 1, 4, 1, 5]
+    eng = ServeEngine(cfg, params, max_batch=1, max_len=64,
+                      greedy=False, seed=7)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=1))
+    eng._admit()
+
+    # reproduce the engine's draw: prefill logits + first split of the key
+    lg, _ = jax.jit(
+        lambda b: M.prefill(cfg, params, b, 64)
+    )({"tokens": jnp.asarray([prompt], dtype=jnp.int32)})
+    _, sub = jax.random.split(jax.random.PRNGKey(7))
+    expected = int(jax.random.categorical(sub, lg[0, -1]))
+    assert eng.slot_req[0].generated[0] == expected
+
+    # greedy engines keep the argmax first token
+    eng2 = ServeEngine(cfg, params, max_batch=1, max_len=64, greedy=True)
+    eng2.submit(Request(rid=1, prompt=prompt, max_new_tokens=1))
+    eng2._admit()
+    assert eng2.slot_req[0].generated[0] == int(jnp.argmax(lg[0, -1]))
+
+
 def test_engine_metrics(setup):
     cfg, params = setup
     eng = ServeEngine(cfg, params, max_batch=2, max_len=64)

@@ -1,0 +1,398 @@
+"""Staged AOT API tests: ChunkConfig, trace/search/compile, shape buckets.
+
+Covers the ISSUE-2 acceptance contract: the staged path produces the same
+final peak as the legacy one-shot call; a second compile at a different
+sequence length inside the same bucket replays the stored plan with zero
+search/selection passes (stage counters, not timing); `ChunkConfig`
+validation and cache-key stability; the deprecation shim preserving the old
+call behavior; and PlanCache GC/schema-versioning.
+"""
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ChunkConfig,
+    ChunkedFunction,
+    PlanCache,
+    ShapeBucketer,
+    autochunk,
+    build_autochunk,
+    stats,
+)
+from repro.core.plan import PLAN_FORMAT_VERSION, ChunkPlan, PlanApplyError
+from repro.core.selection import CostHyper
+
+
+def _mini_block(w, x):
+    q = x @ w["wq"]
+    k = x @ w["wk"]
+    v = x @ w["wv"]
+    logits = jnp.einsum("bsd,btd->bst", q, k) / jnp.sqrt(x.shape[-1])
+    a = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bst,btd->bsd", a, v) @ w["wo"]
+    h = x + o
+    ff = jax.nn.gelu(h @ w["w1"]) @ w["w2"]
+    return h + ff
+
+
+def _mini_weights(d=32, f=64, key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 6)
+    return {
+        "wq": jax.random.normal(ks[0], (d, d)) * 0.1,
+        "wk": jax.random.normal(ks[1], (d, d)) * 0.1,
+        "wv": jax.random.normal(ks[2], (d, d)) * 0.1,
+        "wo": jax.random.normal(ks[3], (d, d)) * 0.1,
+        "w1": jax.random.normal(ks[4], (d, f)) * 0.1,
+        "w2": jax.random.normal(ks[5], (f, d)) * 0.1,
+    }
+
+
+def _x(seq=48, d=32, key=9):
+    return jax.random.normal(jax.random.PRNGKey(key), (2, seq, d))
+
+
+# ---------------------------------------------------------------------------
+# ChunkConfig
+# ---------------------------------------------------------------------------
+
+def test_config_defaults_to_paper_budget():
+    cfg = ChunkConfig()
+    assert cfg.budget_ratio == 0.5 and cfg.budget_bytes is None
+    assert cfg.resolve_budget(1000) == 500
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        ChunkConfig(budget_ratio=0.4, budget_bytes=100)
+    with pytest.raises(ValueError):
+        ChunkConfig(budget_ratio=1.5)
+    with pytest.raises(ValueError):
+        ChunkConfig(budget_ratio=0.0)
+    with pytest.raises(ValueError):
+        ChunkConfig(budget_bytes=0)
+    with pytest.raises(ValueError):
+        ChunkConfig(beam=0)
+    with pytest.raises(ValueError):
+        ChunkConfig(anneal=-1)
+    with pytest.raises(ValueError):
+        ChunkConfig(min_gain=-0.1)
+    with pytest.raises(ValueError):
+        ChunkConfig(dim_blocklist=(-1,))
+    with pytest.raises(ValueError):
+        ChunkConfig(hyper="nope")
+
+
+def test_config_coerces_and_orders_int_tuples():
+    cfg = ChunkConfig(weight_argnums=[2, 0, 2], dim_blocklist=(3, 1))
+    assert cfg.weight_argnums == (0, 2)
+    assert cfg.dim_blocklist == (1, 3)
+
+
+def test_config_with_swaps_budget_kind():
+    cfg = ChunkConfig(budget_ratio=0.4)
+    cfg2 = cfg.with_(budget_bytes=1234)
+    assert cfg2.budget_bytes == 1234 and cfg2.budget_ratio is None
+    cfg3 = cfg2.with_(budget_ratio=0.2)
+    assert cfg3.budget_ratio == 0.2 and cfg3.budget_bytes is None
+
+
+def test_config_cache_token_stability():
+    a = ChunkConfig(budget_ratio=0.3, window=32, hyper=CostHyper(lam=2.0))
+    b = ChunkConfig(budget_ratio=0.3, window=32, hyper=CostHyper(lam=2.0))
+    assert a.cache_token() == b.cache_token()
+    assert a.to_dict() == b.to_dict()
+    # any knob/hyper/budget change must change the token
+    assert a.with_(window=48).cache_token() != a.cache_token()
+    assert a.with_(budget_ratio=0.4).cache_token() != a.cache_token()
+    c = ChunkConfig(budget_ratio=0.3, window=32, hyper=CostHyper(lam=9.0))
+    assert c.cache_token() != a.cache_token()
+    # verbose is presentation-only: never part of identity
+    assert a.with_(verbose=True).cache_token() == a.cache_token()
+    # round-trips through its dict form
+    assert ChunkConfig.from_dict(a.to_dict()) == a
+
+
+def test_config_search_knobs_matches_legacy_layout():
+    cfg = ChunkConfig(dim_blocklist=(4, 2))
+    knobs = cfg.search_knobs()
+    assert set(knobs) == {
+        "max_stages", "beam", "window", "min_gain", "allow_hoist",
+        "dim_blocklist", "anneal",
+    }
+    assert knobs["dim_blocklist"] == [2, 4]
+
+
+# ---------------------------------------------------------------------------
+# ShapeBucketer
+# ---------------------------------------------------------------------------
+
+def test_bucketer_pow2_and_min_dim():
+    b = ShapeBucketer()
+    assert b.bucket_dim(48) == 64
+    assert b.bucket_dim(64) == 64
+    assert b.bucket_dim(65) == 128
+    assert b.bucket_dim(4) == 4        # below min_dim: passes through
+    assert b.bucket_shape((2, 48, 31)) == (2, 64, 31)
+
+
+def test_bucketer_explicit_boundaries():
+    b = ShapeBucketer(buckets=(128, 512))
+    assert b.bucket_dim(100) == 128
+    assert b.bucket_dim(128) == 128
+    assert b.bucket_dim(200) == 512
+    assert b.bucket_dim(600) == 1024   # beyond boundaries: pow2 fallback
+    with pytest.raises(ValueError):
+        ShapeBucketer(buckets=(512, 128))
+    with pytest.raises(ValueError):
+        ShapeBucketer(buckets=())
+
+
+# ---------------------------------------------------------------------------
+# Staged trace/search/compile
+# ---------------------------------------------------------------------------
+
+def test_staged_matches_legacy_one_shot():
+    """Acceptance: the staged pipeline produces the same final peak (and
+    outputs) as the legacy one-shot call at the same config."""
+    w, x = _mini_weights(), _x()
+    legacy = build_autochunk(_mini_block, (w, x), budget_ratio=0.4)
+
+    cf = autochunk(_mini_block, ChunkConfig(budget_ratio=0.4))
+    specs = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), (w, x)
+    )
+    traced = cf.trace(*specs)
+    assert traced.baseline_peak == legacy.baseline_peak
+    assert traced.budget_bytes == legacy.budget_bytes
+    assert traced.memory_profile.peak_bytes == legacy.baseline_peak
+
+    planned = traced.search()
+    assert planned.final_peak == legacy.final_peak
+    assert len(planned.plan.stages) == len(legacy.plan)
+    assert not planned.from_cache
+
+    compiled = planned.compile()
+    assert compiled.result.final_peak == legacy.final_peak
+    np.testing.assert_allclose(
+        np.asarray(compiled(w, x)), np.asarray(_mini_block(w, x)), atol=1e-5
+    )
+
+
+def test_planned_is_serializable_before_codegen():
+    w, x = _mini_weights(), _x()
+    cf = autochunk(_mini_block, ChunkConfig(budget_ratio=0.4))
+    planned = cf.trace(w, x).search()
+    blob = planned.plan.to_json()
+    restored = ChunkPlan.from_json(blob)
+    assert restored.to_dict() == planned.plan.to_dict()
+    assert restored.version == PLAN_FORMAT_VERSION
+
+
+def test_planned_save_and_load(tmp_path):
+    w, x = _mini_weights(), _x()
+    cf = autochunk(_mini_block, ChunkConfig(budget_ratio=0.4))
+    planned = cf.trace(w, x).search()
+    planned.save(tmp_path / "plan.json")
+    assert ChunkPlan.load(tmp_path / "plan.json").final_peak == planned.final_peak
+
+
+def test_bucket_hit_runs_zero_search_passes():
+    """Acceptance: a second compile at a different seq len inside the same
+    bucket replays the stored plan with search_passes == 0."""
+    w = _mini_weights()
+    cf = autochunk(_mini_block, ChunkConfig(budget_ratio=0.4))
+    first = cf.trace(w, _x(seq=48)).search()
+    assert not first.from_cache and first.plan.stages
+
+    x2 = _x(seq=60)  # same pow2 bucket as 48 (-> 64)
+    before = stats.snapshot()
+    planned = cf.trace(w, x2).search()
+    delta = stats.delta(before)
+    assert delta["search_passes"] == 0
+    assert delta["selection_passes"] == 0
+    assert delta["plan_bucket_hits"] == 1
+    assert planned.from_cache and planned.bucket_hit
+    assert len(planned.plan.stages) == len(first.plan.stages)
+    np.testing.assert_allclose(
+        np.asarray(planned.compile()(w, x2)),
+        np.asarray(_mini_block(w, x2)),
+        atol=1e-5,
+    )
+
+
+def test_different_bucket_searches_fresh():
+    w = _mini_weights()
+    cf = autochunk(_mini_block, ChunkConfig(budget_ratio=0.4))
+    cf.trace(w, _x(seq=48)).search()
+    before = stats.snapshot()
+    planned = cf.trace(w, _x(seq=100)).search()  # bucket 128 != 64
+    delta = stats.delta(before)
+    assert delta["search_passes"] > 0
+    assert not planned.from_cache
+
+
+def test_bucket_reuse_persists_through_disk_cache(tmp_path):
+    """A fresh ChunkedFunction over the same on-disk cache replays a plan
+    searched by another process at a sibling shape in the bucket."""
+    w = _mini_weights()
+    cache_dir = tmp_path / "plans"
+    cf1 = autochunk(_mini_block, ChunkConfig(budget_ratio=0.4), cache=cache_dir)
+    cf1.trace(w, _x(seq=48)).search()
+
+    cf2 = autochunk(_mini_block, ChunkConfig(budget_ratio=0.4), cache=cache_dir)
+    before = stats.snapshot()
+    planned = cf2.trace(w, _x(seq=60)).search()
+    delta = stats.delta(before)
+    assert delta["search_passes"] == 0 and planned.bucket_hit
+    # bucket aliases are not counted as top-level cache entries
+    assert PlanCache(cache_dir).stats()["entries"] == len(
+        list(cache_dir.glob("*.json"))
+    )
+
+
+def test_direct_call_compiles_lazily_per_shape():
+    w = _mini_weights()
+    x48, x60 = _x(seq=48), _x(seq=60)
+    cf = autochunk(_mini_block, ChunkConfig(budget_ratio=0.4))
+    y = cf(w, x48)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(_mini_block(w, x48)), atol=1e-5
+    )
+    cf(w, x48)  # same shape: no new compile
+    assert cf.counters["compiles"] == 1 and cf.counters["shape_hits"] == 1
+    before = stats.snapshot()
+    cf(w, x60)  # sibling shape: new compile, but via bucket replay
+    delta = stats.delta(before)
+    assert cf.counters["compiles"] == 2
+    assert cf.counters["bucket_hits"] == 1
+    assert delta["search_passes"] == 0
+    s = cf.stats()
+    assert s["compiled_shapes"] == 2 and s["bucket_plans"] == 1
+
+
+def test_decorator_form():
+    w, x = _mini_weights(), _x()
+
+    @autochunk(ChunkConfig(budget_ratio=0.4))
+    def block(w, x):
+        return _mini_block(w, x)
+
+    assert isinstance(block, ChunkedFunction)
+    np.testing.assert_allclose(
+        np.asarray(block(w, x)), np.asarray(_mini_block(w, x)), atol=1e-5
+    )
+
+
+def test_kwargs_form_builds_config():
+    cf = autochunk(_mini_block, budget_ratio=0.3, window=32)
+    assert cf.config.budget_ratio == 0.3 and cf.config.window == 32
+    cf2 = autochunk(_mini_block, memory_budget=0.25)
+    assert cf2.config.budget_ratio == 0.25
+
+
+def test_bucketer_none_disables_bucketing():
+    w = _mini_weights()
+    cf = autochunk(_mini_block, ChunkConfig(budget_ratio=0.4), bucketer=None)
+    cf.trace(w, _x(seq=48)).search()
+    before = stats.snapshot()
+    cf.trace(w, _x(seq=60)).search()
+    delta = stats.delta(before)
+    assert delta["search_passes"] > 0 and delta["plan_bucket_hits"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shim
+# ---------------------------------------------------------------------------
+
+def test_legacy_shim_warns_and_preserves_behavior():
+    w, x = _mini_weights(), _x()
+    with pytest.warns(DeprecationWarning):
+        fn = autochunk(_mini_block, (w, x), memory_budget=0.4)
+    res = fn.autochunk_result
+    assert res.final_peak == build_autochunk(
+        _mini_block, (w, x), budget_ratio=0.4
+    ).final_peak
+    np.testing.assert_allclose(
+        np.asarray(fn(w, x)), np.asarray(_mini_block(w, x)), atol=1e-5
+    )
+    # absolute-bytes spelling (> 1.0) still routes to budget_bytes
+    with pytest.warns(DeprecationWarning):
+        fn2 = autochunk(_mini_block, (w, x), 10**9)
+    assert fn2.autochunk_result.budget_bytes == 10**9
+
+
+def test_legacy_one_shot_rejects_ambiguous_budget():
+    w, x = _mini_weights(), _x()
+    with pytest.raises(ValueError):
+        build_autochunk(_mini_block, (w, x))
+    with pytest.raises(ValueError):
+        build_autochunk(_mini_block, (w, x), budget_ratio=0.3, budget_bytes=1)
+
+
+# ---------------------------------------------------------------------------
+# PlanCache GC + schema versioning
+# ---------------------------------------------------------------------------
+
+def _dummy_plan(key="k"):
+    return ChunkPlan(cache_key=key, budget_bytes=1, baseline_peak=2, final_peak=1)
+
+
+def test_version_mismatch_rejected_not_crashed(tmp_path):
+    p = _dummy_plan()
+    d = p.to_dict()
+    d["version"] = PLAN_FORMAT_VERSION + 1
+    with pytest.raises(PlanApplyError):
+        ChunkPlan.from_dict(d)
+    d["version"] = PLAN_FORMAT_VERSION - 1
+    with pytest.raises(PlanApplyError):
+        ChunkPlan.from_dict(d)
+    # an on-disk plan with a foreign schema version is a cache miss
+    cache_dir = tmp_path / "plans"
+    cache_dir.mkdir()
+    (cache_dir / "stale.json").write_text(json.dumps(d))
+    cache = PlanCache(cache_dir)
+    assert cache.get("stale") is None
+    assert cache.stats()["misses"] == 1
+
+
+def test_prune_max_entries(tmp_path):
+    cache = PlanCache(tmp_path / "plans")
+    for i in range(5):
+        cache.put(f"k{i}", _dummy_plan(f"k{i}"))
+        now = time.time()
+        import os
+
+        os.utime(cache._disk_path(f"k{i}"), (now - 100 + i, now - 100 + i))
+    removed = cache.prune(max_entries=2)
+    assert removed == 3
+    assert len(cache) == 2
+    assert cache.get("k4") is not None  # newest survive
+    assert cache.get("k0") is None
+
+
+def test_prune_max_age(tmp_path):
+    import os
+
+    cache = PlanCache(tmp_path / "plans")
+    cache.put("old", _dummy_plan("old"))
+    cache.put("new", _dummy_plan("new"))
+    past = time.time() - 1000
+    os.utime(cache._disk_path("old"), (past, past))
+    removed = cache.prune(max_age_s=500)
+    assert removed == 1
+    assert cache.get("old") is None and cache.get("new") is not None
+
+
+def test_prune_in_memory(tmp_path):
+    cache = PlanCache()
+    for i in range(4):
+        cache.put(f"k{i}", _dummy_plan(f"k{i}"))
+    assert cache.prune(max_entries=1) == 3
+    assert len(cache) == 1
+    with pytest.raises(ValueError):
+        cache.prune(max_entries=-1)

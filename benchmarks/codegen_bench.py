@@ -1,0 +1,184 @@
+"""Codegen backend benchmark: legacy nested-interpreter vs jaxpr-native lowering.
+
+Compares, on the quickstart GPT model, the pre-lowering compile pipeline
+(one ``build_chunked_fn`` closure + full re-trace per beam candidate and per
+stage) against the lowering backend (graph rewrites, one emit, one
+verification re-trace), reporting compile wall time, trace/search counts,
+and the compiled function's tokens/s.
+
+``benchmarks.run --bench-out BENCH_codegen.json`` writes the result as JSON;
+``--bench-check`` re-measures and asserts ``trace_calls`` and
+``search_passes`` have not regressed against the committed baseline.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+from jax import tree_util
+
+from repro.core import (
+    build_autochunk,
+    build_chunked_fn,
+    estimate_memory,
+    search_chunks,
+    stats,
+    trace,
+)
+from repro.core.selection import CostHyper, rank_candidates
+
+from .common import gpt_block_model, time_fn
+
+SEQ = 128
+LAYERS = 2
+D = 64
+BUDGET = 0.4
+BEAM = 4
+MAX_STAGES = 8
+
+
+def _flat_problem():
+    cfg, params, batch, fwd = gpt_block_model(SEQ, n_layers=LAYERS, d=D)
+    flat, in_tree = tree_util.tree_flatten((params, batch))
+    n_weights = len(tree_util.tree_leaves(params))
+    weight_flat = list(range(n_weights))
+
+    def flat_fn(*leaves):
+        p, b = tree_util.tree_unflatten(in_tree, leaves)
+        out = fwd(p, b)
+        return tuple(tree_util.tree_leaves(out))
+
+    return params, batch, fwd, flat_fn, flat, weight_flat
+
+
+def _progress_metric(prof):
+    peak = prof.peak_bytes
+    near = sum(1 for b in prof.per_eqn_bytes if b >= 0.99 * peak)
+    top = sum(sorted(prof.per_eqn_bytes)[-8:])
+    return (peak, near, top)
+
+
+def _legacy_compile(flat_fn, flat, weight_flat):
+    """The pre-PR backend, reproduced faithfully for comparison: the same
+    greedy staged search as the pipeline, but every applied stage wraps the
+    previous callable in a fresh interpreter closure and each beam candidate
+    is verified by a FULL re-trace of the wrapped program (the K-stage =
+    K nested interpreters + K+1 traces cost structure this PR removed)."""
+    g, _ = trace(flat_fn, flat, weight_argnums=weight_flat)
+    prof = estimate_memory(g)
+    budget = int(prof.peak_bytes * BUDGET)
+    cur = flat_fn
+    for _ in range(MAX_STAGES):
+        if prof.peak_bytes <= budget:
+            break
+        cands = search_chunks(g, prof)
+        ranked = rank_candidates(g, prof, cands, budget, CostHyper())
+        applied = None
+        best_key = None
+        cur_metric = _progress_metric(prof)
+        for cand, n, est, cost in ranked[:BEAM]:
+            try:
+                fn2 = build_chunked_fn(g, cand, n)
+                g2, _ = trace(fn2, flat, weight_argnums=weight_flat)
+                prof2 = estimate_memory(g2)
+            except Exception:
+                continue
+            big_gain = prof2.peak_bytes < prof.peak_bytes * 0.98
+            if not big_gain and _progress_metric(prof2) >= cur_metric:
+                continue
+            over = prof2.peak_bytes > budget
+            key = (
+                (over, cost, prof2.peak_bytes)
+                if not over
+                else (over,) + _progress_metric(prof2) + (cost,)
+            )
+            if best_key is None or key < best_key:
+                best_key = key
+                applied = (fn2, g2, prof2)
+        if applied is None:
+            break
+        cur, g, prof = applied
+    return cur, prof.peak_bytes
+
+
+def run_codegen_bench() -> Dict[str, Dict[str, float]]:
+    params, batch, fwd, flat_fn, flat, weight_flat = _flat_problem()
+
+    before = stats.snapshot()
+    t0 = time.time()
+    legacy_fn, legacy_peak = _legacy_compile(flat_fn, flat, weight_flat)
+    legacy = {
+        "compile_s": round(time.time() - t0, 3),
+        **{
+            k: v
+            for k, v in stats.delta(before).items()
+            if k in ("trace_calls", "search_passes", "codegen_calls")
+        },
+        "final_peak": int(legacy_peak),
+    }
+
+    before = stats.snapshot()
+    t0 = time.time()
+    res = build_autochunk(
+        fwd, (params, batch), budget_ratio=BUDGET,
+        beam=BEAM, max_stages=MAX_STAGES, anneal=0,
+    )
+    d = stats.delta(before)
+    lowered = {
+        "compile_s": round(time.time() - t0, 3),
+        **{
+            k: v
+            for k, v in d.items()
+            if k in ("trace_calls", "search_passes", "lowering_emits",
+                     "lowering_rewrites")
+        },
+        "final_peak": int(res.final_peak),
+    }
+
+    us = time_fn(res.fn, params, batch, iters=3, warmup=1)
+    tokens = batch["tokens"].size
+    return {
+        "model": {"seq": SEQ, "layers": LAYERS, "d": D, "budget": BUDGET},
+        "legacy": legacy,
+        "lowered": lowered,
+        "tokens_per_s": round(tokens / (us / 1e6), 1),
+    }
+
+
+def check_against(baseline: Dict, fresh: Dict) -> list:
+    """Regression gates for CI: retrace count and search passes must not
+    grow vs the committed baseline (compile wall time is informational —
+    CI machines are too noisy to gate on it)."""
+    problems = []
+    for key in ("trace_calls", "search_passes"):
+        base = baseline["lowered"].get(key)
+        cur = fresh["lowered"].get(key)
+        if base is not None and cur is not None and cur > base:
+            problems.append(f"lowered.{key} regressed: {cur} > baseline {base}")
+    base_t = baseline["legacy"].get("trace_calls")
+    cur_t = fresh["lowered"].get("trace_calls")
+    if base_t is not None and cur_t is not None and cur_t >= base_t:
+        problems.append(
+            f"lowered trace_calls {cur_t} not below legacy baseline {base_t}"
+        )
+    return problems
+
+
+def run(rows) -> None:
+    """Benchmark-suite entry point (``--only codegen``)."""
+    out = run_codegen_bench()
+    rows.append(
+        (
+            "codegen_legacy",
+            out["legacy"]["compile_s"] * 1e6,
+            f"traces={out['legacy']['trace_calls']}",
+        )
+    )
+    rows.append(
+        (
+            "codegen_lowered",
+            out["lowered"]["compile_s"] * 1e6,
+            f"traces={out['lowered']['trace_calls']}"
+            f";tokens_per_s={out['tokens_per_s']}",
+        )
+    )

@@ -16,10 +16,12 @@ import argparse
 import sys
 import time
 import traceback
+from pathlib import Path
 
 from . import (
     ablation,
     arch_coverage,
+    codegen_bench,
     max_seq,
     roofline,
     throughput_vs_budget,
@@ -35,7 +37,10 @@ SUITES = {
     "table1": ablation.run,
     "archcov": arch_coverage.run,
     "roofline": roofline.run,
+    "codegen": codegen_bench.run,
 }
+
+BASELINE_BENCH = str(Path(__file__).resolve().parent / "BENCH_codegen.json")
 
 
 def smoke(rows) -> None:
@@ -69,11 +74,37 @@ def main() -> None:
                     help="on-disk chunk-plan cache directory: repeated runs"
                          " replay stored plans instead of re-searching"
                          " (also settable via AUTOCHUNK_PLAN_CACHE)")
+    ap.add_argument("--bench-out", type=str, default=None,
+                    help="run the codegen backend benchmark (compile time,"
+                         " retrace count, tokens/s; legacy vs lowered) and"
+                         " write the JSON report to this path")
+    ap.add_argument("--bench-check", action="store_true",
+                    help="assert trace_calls/search_passes of the lowering"
+                         " backend do not regress vs the committed"
+                         " benchmarks/BENCH_codegen.json (CI gate; implies"
+                         " the codegen benchmark)")
     args = ap.parse_args()
     from . import common
 
     if args.plan_cache:
         common.set_plan_cache(args.plan_cache)
+    if args.bench_out or args.bench_check:
+        import json
+
+        fresh = codegen_bench.run_codegen_bench()
+        print(json.dumps(fresh, indent=2))
+        if args.bench_out:
+            Path(args.bench_out).write_text(json.dumps(fresh, indent=2) + "\n")
+        if args.bench_check:
+            baseline = json.loads(Path(BASELINE_BENCH).read_text())
+            problems = codegen_bench.check_against(baseline, fresh)
+            for p in problems:
+                print(f"# BENCH REGRESSION: {p}", file=sys.stderr)
+            if problems:
+                sys.exit(1)
+            print("# bench check ok: retrace/search counts within baseline",
+                  file=sys.stderr)
+        return
     if args.smoke:
         names = ["smoke"]
         suites = {"smoke": smoke}

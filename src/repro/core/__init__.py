@@ -3,7 +3,9 @@ from . import stats
 from .api import AutoChunkResult, StageRecord, autochunk, build_autochunk
 from .codegen import build_chunked_fn, build_fn_from_plan, graph_to_fn
 from .config import ChunkConfig, ShapeBucketer
-from .staged import ChunkedFunction, CompiledFunction, Planned, Traced
+from .kernel_dispatch import dispatch_graph
+from .lowering import ChunkLoopEqn, apply_chunk, emit
+from .staged import ChunkedFunction, CompiledFunction, Lowered, Planned, Traced
 from .estimation import MemoryProfile, estimate_memory
 from .graph import Graph, dim_stride, eqn_flops, graph_flops, trace
 from .plan import (
@@ -31,6 +33,11 @@ __all__ = [
     "build_chunked_fn",
     "build_fn_from_plan",
     "graph_to_fn",
+    "ChunkLoopEqn",
+    "apply_chunk",
+    "emit",
+    "dispatch_graph",
+    "Lowered",
     "MemoryProfile",
     "estimate_memory",
     "Graph",

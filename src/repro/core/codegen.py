@@ -1,105 +1,55 @@
-"""Runtime codegen: rewrite a Graph so a chunk executes as a lax.map loop.
+"""Runtime codegen front end over the jaxpr-native lowering backend.
 
-The paper regenerates Python source with PyTorch FX and recompiles.  The JAX
-equivalent is cleaner: we rebuild a *traceable callable* that
+The paper regenerates Python source with PyTorch FX and recompiles.  Our
+equivalent lives in :mod:`repro.core.lowering`: chunk stages are *graph
+rewrites* (a chunked region becomes a structured ``chunk_loop`` node whose
+body runs under ``lax.scan``), and the whole multi-stage plan is emitted
+once as a single traceable callable.  Because the result is an ordinary
+traceable function, it composes with ``jax.jit``, ``pjit``/``shard_map``
+sharding, further AutoChunk stages, and autodiff — none of which FX codegen
+can offer.
 
-  1. evaluates the prefix equations,
-  2. evaluates the hoisted equations (chunk-invariant subgraph, computed once),
-  3. runs the in-loop equations under ``lax.map`` over stacked slices of the
-     chunked inputs (XLA lowers this to a while-loop whose body only ever
-     materializes chunk-sized intermediates),
-  4. reassembles the loop outputs and evaluates the suffix equations.
+This module keeps the public codegen surface:
 
-Because the result is an ordinary traceable function, it composes with
-``jax.jit``, ``pjit``/``shard_map`` sharding, further AutoChunk stages, and
-autodiff — none of which FX codegen can offer.
+* :func:`build_chunked_fn` — the legacy single-stage closure codegen (one
+  interpreter wrapping the previous callable).  Still useful for property
+  tests and as the pre-lowering reference in ``benchmarks/codegen_bench``;
+  the compile pipeline no longer calls it.
+* :func:`build_fn_from_plan` — plan replay, now lowering-backed: K stage
+  rewrites on one graph, one emit, ONE verification re-trace (the legacy
+  path re-traced once per stage).
+* :func:`graph_to_fn` — the identity emit.
 """
 from __future__ import annotations
 
 from typing import Any, Callable, Dict, List, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 
 from . import stats
-from .graph import Graph, Literal, Var, is_var
+from .graph import Graph, Var, is_var
+from .lowering import (
+    _adjust_eqn_params,
+    _slice_chunk,
+    _write_chunk,
+    apply_chunk,
+    emit,
+    eval_eqns as _eval_eqns,
+)
 from .search import ChunkCandidate
-
-
-def _eval_eqns(eqns, env: Dict[Var, Any]) -> None:
-    """Interpret a list of jaxpr equations against an environment."""
-    for eqn in eqns:
-        invals = [env[iv] if is_var(iv) else iv.val for iv in eqn.invars]
-        subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
-        ans = eqn.primitive.bind(*subfuns, *invals, **bind_params)
-        outs = ans if eqn.primitive.multiple_results else [ans]
-        for ov, o in zip(eqn.outvars, outs):
-            env[ov] = o
-
-
-def _adjust_eqn_params(eqn, var_dim: Dict[Var, int], ext: int, c: int):
-    """Shrink static shape params of an in-loop equation to chunk size ``c``.
-
-    Primitives like broadcast_in_dim / reshape / slice bake their output
-    shapes into eqn.params at trace time; inside the chunk loop the chunked
-    dim has extent ``c``, so those params must be rewritten.  Primitives
-    without shape params re-derive output shapes from their (sliced) inputs
-    and need no adjustment.
-    """
-    out_dims = [
-        (ov, var_dim[ov]) for ov in eqn.outvars if is_var(ov) and ov in var_dim
-    ]
-    if not out_dims:
-        return eqn
-
-    def shrink(size: int) -> int:
-        return c if size == ext else size
-
-    name = eqn.primitive.name
-    _, d = out_dims[0]
-    p = dict(eqn.params)
-    if name == "broadcast_in_dim":
-        shp = list(p["shape"])
-        shp[d] = shrink(shp[d])
-        p["shape"] = tuple(shp)
-        return eqn.replace(params=p)
-    if name == "reshape":
-        shp = list(p["new_sizes"])
-        shp[d] = shrink(shp[d])
-        p["new_sizes"] = tuple(shp)
-        return eqn.replace(params=p)
-    if name == "slice":
-        lim = list(p["limit_indices"])
-        lim[d] = shrink(lim[d])
-        p["limit_indices"] = tuple(lim)
-        return eqn.replace(params=p)
-    if name == "dynamic_slice":
-        ss = list(p["slice_sizes"])
-        ss[d] = shrink(ss[d])
-        p["slice_sizes"] = tuple(ss)
-        return eqn.replace(params=p)
-    if name == "iota":
-        shp = list(p["shape"])
-        shp[d] = shrink(shp[d])
-        p["shape"] = tuple(shp)
-        return eqn.replace(params=p)
-    return eqn
-
-
-def _slice_chunk(x, dim: int, i, c: int):
-    """Dynamic slice of chunk i (size c) along dim."""
-    return lax.dynamic_slice_in_dim(x, i * c, c, axis=dim)
-
-
-def _write_chunk(buf, val, dim: int, i, c: int):
-    return lax.dynamic_update_slice_in_dim(buf, val, i * c, axis=dim)
 
 
 def build_chunked_fn(
     g: Graph, cand: ChunkCandidate, n_chunks: int
 ) -> Callable[..., Tuple[Any, ...]]:
     """Return a flat-signature callable implementing g with cand chunked.
+
+    Legacy per-stage codegen: the chunk loop is built as a Python closure
+    over ``g`` rather than as a graph rewrite, so stacking K stages nests K
+    interpreters and costs a re-trace per stage.  Kept for the property
+    tests and the pre-lowering benchmark reference; the pipeline itself
+    rewrites with :func:`repro.core.lowering.apply_chunk` and emits once.
 
     ``n_chunks`` need not divide the chunk extent (beyond-paper): the last
     chunk is handled by clamped dynamic slices — ``dynamic_slice`` clamps
@@ -128,7 +78,6 @@ def build_chunked_fn(
     consts = dict(g.consts)
     invars = list(g.invars)
     outvars = list(g.outvars)
-    n = int(n_chunks)
 
     def fn(*flat_args):
         env: Dict[Var, Any] = dict(consts)
@@ -180,14 +129,17 @@ def build_fn_from_plan(
     baseline_graph: Graph = None,
     rescale: bool = False,
     record: List = None,
+    kernel_dispatch: bool = False,
 ):
     """Fast path: apply a saved :class:`~repro.core.plan.ChunkPlan` directly.
 
-    Replays the plan's stages in order — each stage re-traces the current
-    callable (deterministic, so eqn indices and positional var names line
-    up with the graph the stage was recorded on) and rebuilds the chunked
-    loop with :func:`build_chunked_fn`.  No search or selection pass runs.
-    A final re-trace + estimation verifies legality; any mismatch raises
+    Replays the plan's stages as successive graph rewrites on one graph
+    (:func:`~repro.core.lowering.apply_chunk`) — stage ``i``'s positional
+    var names resolve against the rewritten graph of stage ``i-1``, which
+    is deterministic, so no per-stage re-trace is needed.  The final graph
+    is emitted once and verified by a single re-trace + estimation; with a
+    ``baseline_graph`` supplied that is the ONLY trace of the replay,
+    independent of the stage count.  Any mismatch raises
     ``PlanApplyError`` so the caller can fall back to a cold compile.
 
     ``rescale=True`` permits replaying a plan recorded at a different shape
@@ -195,7 +147,8 @@ def build_fn_from_plan(
     retargeted to the traced shapes, keeping the chunk *count*.  When
     ``record`` is a list, one ``(graph, candidate, n_chunks)`` triple per
     applied stage is appended — callers use it to re-serialize the plan at
-    the shapes it actually ran at.
+    the shapes it actually ran at.  ``kernel_dispatch=True`` runs the fused
+    Pallas kernel dispatch pass on the rewritten graph before emission.
 
     Returns ``(final_flat_fn, final_graph, final_profile)``.
     """
@@ -204,20 +157,17 @@ def build_fn_from_plan(
     from .plan import PlanApplyError
 
     stats.bump("plan_replays")
-    cur = flat_fn
     g = baseline_graph
+    if g is None:
+        try:
+            g, _ = trace(flat_fn, flat_args, weight_argnums=weight_argnums)
+        except Exception as e:
+            raise PlanApplyError(f"baseline re-trace failed: {e!r}") from e
     for stage_i, st in enumerate(plan.stages):
-        if g is None:
-            try:
-                g, _ = trace(cur, flat_args, weight_argnums=weight_argnums)
-            except Exception as e:
-                raise PlanApplyError(
-                    f"re-trace before plan stage {stage_i} failed: {e!r}"
-                ) from e
         try:
             cand = st.to_candidate(g, rescale=rescale)
             n = min(st.n_chunks, cand.chunk_extent) if rescale else st.n_chunks
-            cur = build_chunked_fn(g, cand, n)
+            g2 = apply_chunk(g, cand, n)
         except PlanApplyError:
             raise
         except Exception as e:
@@ -226,18 +176,23 @@ def build_fn_from_plan(
             ) from e
         if record is not None:
             record.append((g, cand, n))
-        g = None  # next stage re-traces the rewritten callable
+        g = g2
 
+    if kernel_dispatch:
+        from .kernel_dispatch import dispatch_graph
+
+        dispatch_graph(g)
+    fn = emit(g)
     try:
-        g, _ = trace(cur, flat_args, weight_argnums=weight_argnums)
-        prof = estimate_memory(g)
+        gv, _ = trace(fn, flat_args, weight_argnums=weight_argnums)
+        prof = estimate_memory(gv)
     except Exception as e:
         raise PlanApplyError(f"verification re-trace failed: {e!r}") from e
-    return cur, g, prof
+    return fn, gv, prof
 
 
 def graph_to_fn(g: Graph) -> Callable[..., Tuple[Any, ...]]:
-    """Plain (unchunked) interpreter for a Graph — the identity rewrite."""
+    """Plain interpreter for a Graph — the identity emit (chunk_loop aware)."""
     consts = dict(g.consts)
     invars = list(g.invars)
     outvars = list(g.outvars)

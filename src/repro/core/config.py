@@ -55,6 +55,10 @@ class ChunkConfig:
     ``allow_hoist``     hoist chunk-invariant subgraphs out of the loop
     ``dim_blocklist``   tensor dims never chunked (e.g. a sharded batch axis)
     ``anneal``          budget-halving retries when the target is missed
+    ``kernel_dispatch`` fused Pallas kernel dispatch for chunk-loop bodies:
+                        ``'auto'`` (dispatch on TPU, scan codegen elsewhere),
+                        ``'on'`` (always dispatch — interpret mode on CPU),
+                        ``'off'`` (always scan codegen)
     ``verbose``         per-stage progress printing (not part of the key)
     """
 
@@ -69,6 +73,7 @@ class ChunkConfig:
     allow_hoist: bool = True
     dim_blocklist: Tuple[int, ...] = ()
     anneal: int = 2
+    kernel_dispatch: str = "auto"
     verbose: bool = False
 
     def __post_init__(self):
@@ -95,6 +100,11 @@ class ChunkConfig:
                 raise ValueError(f"{name} must be an int >= {lo}, got {v!r}")
         if self.min_gain < 0:
             raise ValueError(f"min_gain must be >= 0, got {self.min_gain}")
+        if self.kernel_dispatch not in ("auto", "on", "off"):
+            raise ValueError(
+                "kernel_dispatch must be 'auto', 'on', or 'off',"
+                f" got {self.kernel_dispatch!r}"
+            )
         if not isinstance(self.hyper, CostHyper):
             raise ValueError(
                 f"hyper must be a CostHyper, got {type(self.hyper).__name__}"
@@ -146,7 +156,25 @@ class ChunkConfig:
             "allow_hoist": self.allow_hoist,
             "dim_blocklist": sorted(self.dim_blocklist),
             "anneal": self.anneal,
+            "kernel_dispatch": self.resolve_kernel_dispatch(),
         }
+
+    def resolve_kernel_dispatch(self) -> bool:
+        """Whether the kernel-dispatch pass runs for this process.
+
+        ``'auto'`` resolves against the backend: fused Mosaic kernels win on
+        TPU; on CPU/GPU Pallas runs in interpret mode (correct but slow), so
+        auto falls back to scan codegen there.  The *resolved* value feeds
+        the cache key — a plan searched with dispatch-aware costs on TPU is
+        not silently replayed on a CPU host, and vice versa.
+        """
+        if self.kernel_dispatch == "on":
+            return True
+        if self.kernel_dispatch == "off":
+            return False
+        import jax
+
+        return jax.default_backend() == "tpu"
 
     def to_dict(self) -> Dict[str, Any]:
         d = asdict(self)

@@ -43,6 +43,12 @@ class MemoryProfile:
 def _inner_jaxpr_peak(eqn) -> int:
     """Internal activation peak of a loop primitive's body (recursive)."""
     name = eqn.primitive.name
+    if name == "chunk_loop":
+        # structured loop node from core.lowering: the rewrite precomputed
+        # the modeled per-iteration live bytes (chunk-scaled body liveness +
+        # slices + reassembly buffers), so rewritten graphs estimate without
+        # any re-trace
+        return int(eqn.params["body_peak"])
     closed = None
     if name == "scan":
         closed = eqn.params["jaxpr"]

@@ -212,6 +212,7 @@ def trace(
         consts=const_env,
         weight_invars=weight_set,
     )
+    g.closed_jaxpr = closed  # the unflattened ClosedJaxpr (Planned.lower())
     return g, out_tree
 
 
@@ -238,6 +239,10 @@ def eqn_flops(eqn) -> float:
         body = eqn.params["jaxpr"]
         inner = sum(eqn_flops(e) for e in body.jaxpr.eqns)
         return inner * eqn.params["length"]
+    if name == "chunk_loop":
+        # core.lowering structured loop: body eqns keep full-extent avals,
+        # so their summed flops already equal the total across iterations
+        return sum(eqn_flops(e) for e in eqn.params["body"])
     if name.startswith("reduce_") or name in ("argmax", "argmin"):
         return float(eqn.invars[0].aval.size)
     # elementwise-ish default: one op per output element

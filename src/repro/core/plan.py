@@ -20,9 +20,12 @@ module makes the *result* of that loop a first-class artifact:
   ``autochunk(..., cache=...)`` API, the serving engine, and the
   ``repro.tools.precompile`` CLI.
 
-Replaying a plan (see ``codegen.build_fn_from_plan``) re-traces once per
-stage to rebuild the graph the stage's indices refer to and once more to
-verify the final peak — no search or selection pass ever runs on a warm hit.
+Replaying a plan (see ``codegen.build_fn_from_plan``) applies the stages as
+successive graph rewrites (``lowering.apply_chunk``) — stage ``i``'s
+positional names resolve on the deterministically rewritten graph of stage
+``i-1`` — then emits once and re-traces ONCE to verify the final peak: no
+search or selection pass ever runs on a warm hit, and the trace count is
+independent of the stage count.
 """
 from __future__ import annotations
 
@@ -43,7 +46,12 @@ from .search import ChunkCandidate
 # v2: schema-version mismatches are *rejected* (treated as a cache miss and
 # recompiled) instead of best-effort-applied; bucketed plan aliases live in a
 # ``buckets/`` subdirectory of on-disk caches.
-PLAN_FORMAT_VERSION = 2
+# v3: stages >= 1 are recorded against the lowering backend's *rewritten*
+# graphs (prefix + hoisted + chunk_loop node + suffix) rather than against a
+# re-trace of the previous stage's callable, so their eqn indices and
+# positional var names are incompatible with v2 plans; search knobs gained
+# ``kernel_dispatch``.  v2 plans are rejected on load and recompiled.
+PLAN_FORMAT_VERSION = 3
 
 
 class PlanApplyError(RuntimeError):
@@ -253,7 +261,26 @@ def _canon(obj) -> Any:
     if isinstance(obj, (tuple, list)):
         return [_canon(x) for x in obj]
     if isinstance(obj, dict):
-        return {str(k): _canon(obj[k]) for k in sorted(obj, key=str)}
+        if all(isinstance(k, str) for k in obj):
+            return {k: _canon(obj[k]) for k in sorted(obj)}
+        # non-str keys (e.g. a chunk_loop node's Var-keyed var_dim): str(Var)
+        # embeds the object address, so canonicalize keys structurally and
+        # sort by the canonical form to keep the digest deterministic
+        items = sorted(
+            ([_canon(k), _canon(v)] for k, v in obj.items()),
+            key=lambda kv: json.dumps(kv, sort_keys=True, default=str),
+        )
+        return ["dict", items]
+    if is_var(obj):  # vars inside chunk_loop params: shape/dtype identity
+        return ["var", list(obj.aval.shape), str(obj.aval.dtype)]
+    if hasattr(obj, "primitive") and hasattr(obj, "invars"):
+        # a (possibly chunk_loop) equation nested in params: structural sig
+        return [
+            "eqn",
+            obj.primitive.name,
+            [_canon(list(getattr(iv, "aval", iv).shape)) if hasattr(iv, "aval") else repr(iv) for iv in obj.invars],
+            _canon(dict(obj.params)),
+        ]
     if isinstance(obj, (jex_core.ClosedJaxpr,)) or hasattr(obj, "eqns"):
         # nested jaxprs (scan/while/cond bodies): the pretty-printer is
         # deterministic for a fixed structure and includes avals

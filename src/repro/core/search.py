@@ -56,6 +56,11 @@ class ChunkCandidate:
     stride_score: float = 0.0  # 1.0 == leading-dim chunk (free), ->0 minor dims
     body_peak_bytes: int = 0   # per-chunk intermediate bytes at n=1
     static_bytes: int = 0      # full tensors alive while the loop runs
+    # set by the kernel-dispatch pass (core.kernel_dispatch) when this
+    # candidate's body matches a fused Pallas kernel: the VMEM-tile-bounded
+    # body peak the dispatched loop would occupy instead of the full
+    # chunk-slice intermediates
+    kernel_tile_bytes: int = 0
 
     def divisors(self) -> List[int]:
         """Candidate chunk counts: exact divisors plus powers of two (the
@@ -73,10 +78,36 @@ class ChunkCandidate:
 
     def chunked_body_peak(self, n: int) -> int:
         c = -(-self.chunk_extent // n)  # ceil slice extent
-        return int(self.body_peak_bytes * c / max(self.chunk_extent, 1))
+        scaled = int(self.body_peak_bytes * c / max(self.chunk_extent, 1))
+        if self.kernel_tile_bytes:
+            # dispatch-aware cost (fused kernels stream the body through
+            # VMEM tiles): charge the tile-bounded peak, never more than
+            # the scan-body estimate
+            return min(scaled, self.kernel_tile_bytes)
+        return scaled
 
     def key(self) -> Tuple:
         return (self.s, self.e, tuple(sorted((str(v), d) for v, d in self.var_dim.items())))
+
+
+def live_into_bytes(g: Graph) -> List[int]:
+    """``out[s]`` = bytes of values produced before eqn ``s`` and still live
+    at ``s`` — one O(N+V) difference-array sweep over producer/last-use
+    spans (shared by the search prefilter and the selection estimator)."""
+    n = len(g.eqns)
+    delta = [0] * (n + 2)
+    for v, prod in g.producer.items():
+        l = g.last_use.get(v, -1)
+        if l > prod:
+            b = atom_bytes(v)
+            delta[prod + 1] += b
+            delta[min(l, n) + 1] -= b
+    out = [0] * (n + 1)
+    acc = 0
+    for s in range(n + 1):
+        acc += delta[s]
+        out[s] = acc
+    return out
 
 
 def region_io(g: Graph, s: int, e: int) -> Tuple[List[Var], List[Var]]:
@@ -186,6 +217,12 @@ def _analyze(
     # FULL-needed vars must exist whole outside the loop
     for v in needs_full:
         if v in loop_defined:
+            return None
+        if v in var_dim:
+            # one consumer needs the whole tensor, another a slice of it —
+            # slicing would silently feed the FULL consumer per-chunk data
+            # (Rule 4 in spirit; the legacy backend only caught the shape-
+            # mismatch cases of this at re-trace time)
             return None
 
     if not allow_hoist and hoisted:
@@ -335,15 +372,10 @@ def search_chunks(
     lo = max(0, p - window)
     hi = min(n - 1, p + window)
 
-    # live-into-region bytes as a function of region start s
-    def live_in_bytes(s: int) -> int:
-        tot = 0
-        for v, prod in g.producer.items():
-            if prod < s and g.last_use.get(v, -1) >= s:
-                tot += atom_bytes(v)
-        return tot
-
-    _live_cache: Dict[int, int] = {}
+    # live-into-region bytes as a function of region start s: one O(N+V)
+    # prefix-sum sweep replaces the O(V) rescan per region start, which
+    # dominated wide-window searches.
+    live_in = live_into_bytes(g)
 
     pairs = [
         (s, e)
@@ -362,9 +394,7 @@ def search_chunks(
             continue
         if any(len(v.aval.shape) == 0 for v in outputs):
             continue
-        if s not in _live_cache:
-            _live_cache[s] = live_in_bytes(s)
-        floor = _live_cache[s] + sum(atom_bytes(v) for v in outputs)
+        floor = live_in[s] + sum(atom_bytes(v) for v in outputs)
         if floor >= prof.peak_bytes:
             continue  # cannot possibly beat the current peak
         # pick the seed output: produced latest, break ties by size

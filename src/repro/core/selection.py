@@ -65,37 +65,68 @@ def chunk_cost(
         cost += hyper.gamma * density_term
     if hyper.use_stride:
         cost += hyper.lam * stride_term
+    if cand.kernel_tile_bytes:
+        # dispatch-aware (kernel_dispatch enabled and this body matches a
+        # fused Pallas kernel): the loop body runs as one fused kernel, so
+        # the micro penalties (per-node overhead, relayouts) largely vanish
+        # — prefer the kernelizable region over a smaller scan-body one
+        cost *= 0.5
     return cost
 
 
-def estimate_new_peak(
-    g: Graph, prof: MemoryProfile, cand: ChunkCandidate, n: int
-) -> Tuple[int, int]:
-    """Analytic post-chunk (global_peak, region_contribution) for chunk count n.
+def _selection_env(g: Graph, prof: MemoryProfile):
+    """Region-invariant precomputation shared by every candidate: prefix /
+    suffix maxima of the per-eqn profile (for the outside-region peak) and
+    the live-into-region prefix sums.  Turns the estimator from
+    O(eqns + vars) per (candidate, chunk count) into O(1)."""
+    from .search import live_into_bytes
 
-    The global estimate is verified later by a true re-trace; the region
-    contribution is what the chunked loop itself will occupy — it must fit
-    the budget on its own, or no later stage can ever fix it (a chunked
-    scan is opaque to further chunking).
-    """
-    outside = 0
-    for i, b in enumerate(prof.per_eqn_bytes):
-        if i < cand.s or i > cand.e:
-            outside = max(outside, b)
-    # intermediates live across the region boundary
-    live_in = 0
-    for v, p in g.producer.items():
-        if p < cand.s and g.last_use.get(v, -1) >= cand.s:
-            live_in += atom_bytes(v)
-    hoist_b = sum(
+    per = prof.per_eqn_bytes
+    n = len(per)
+    pre = [0] * (n + 1)   # pre[s]  = max per[0:s]
+    for i in range(n):
+        pre[i + 1] = max(pre[i], per[i])
+    suf = [0] * (n + 2)   # suf[e]  = max per[e:]
+    for i in range(n - 1, -1, -1):
+        suf[i] = max(suf[i + 1], per[i])
+    return pre, suf, live_into_bytes(g)
+
+
+def _region_terms(
+    g: Graph, prof: MemoryProfile, cand: ChunkCandidate, env=None
+) -> Tuple[int, int]:
+    """(outside_peak, static_region_bytes): the chunk-count-invariant parts
+    of the post-chunk estimate for one candidate."""
+    if env is None:
+        env = _selection_env(g, prof)
+    pre, suf, live_in = env
+    outside = max(pre[cand.s], suf[cand.e + 1])
+    static = live_in[cand.s]
+    static += sum(
         atom_bytes(ov)
         for i in cand.hoisted
         for ov in g.eqns[i].outvars
         if is_var(ov)
     )
-    out_b = sum(atom_bytes(v) for v in cand.loop_out)
-    out_b += sum(atom_bytes(v) for v in cand.full_out)
-    region = live_in + hoist_b + out_b + cand.chunked_body_peak(n)
+    static += sum(atom_bytes(v) for v in cand.loop_out)
+    static += sum(atom_bytes(v) for v in cand.full_out)
+    return outside, static
+
+
+def estimate_new_peak(
+    g: Graph, prof: MemoryProfile, cand: ChunkCandidate, n: int, *, _terms=None
+) -> Tuple[int, int]:
+    """Analytic post-chunk (global_peak, region_contribution) for chunk count n.
+
+    The global estimate is verified later by re-estimating the rewritten
+    graph; the region contribution is what the chunked loop itself will
+    occupy — it must fit the budget on its own, or no later stage can ever
+    fix it (a chunked loop is opaque to further chunking).
+    """
+    outside, static = _terms if _terms is not None else _region_terms(
+        g, prof, cand
+    )
+    region = static + cand.chunked_body_peak(n)
     return max(outside, region), region
 
 
@@ -107,6 +138,7 @@ def choose_n(
     *,
     mxu_align: int = 128,
     margin: float = 0.95,
+    _env=None,
 ) -> Tuple[int, int, int]:
     """Pick the chunk count: the smallest n whose *region contribution* fits
     ``margin * budget`` (so the chunked loop is never the binding constraint
@@ -116,10 +148,11 @@ def choose_n(
     the largest divisor when nothing fits (progress still possible).
     """
     target = int(budget_bytes * margin)
+    terms = _region_terms(g, prof, cand, _env)
     best: Optional[Tuple[int, int, int]] = None
     divisors = cand.divisors()
     for n in divisors:
-        est, region = estimate_new_peak(g, prof, cand, n)
+        est, region = estimate_new_peak(g, prof, cand, n, _terms=terms)
         if region <= target:
             slice_ext = cand.chunk_extent // n
             aligned = slice_ext % mxu_align == 0 or slice_ext >= mxu_align
@@ -132,13 +165,15 @@ def choose_n(
     # Nothing fits: the loop's *static* tensors (inputs/outputs/hoists)
     # dominate.  Pick the smallest n whose per-chunk body is negligible
     # next to the static floor — larger n only costs speed.
-    _, static = estimate_new_peak(g, prof, cand, max(divisors or [2]))
+    _, static = estimate_new_peak(
+        g, prof, cand, max(divisors or [2]), _terms=terms
+    )
     for n in divisors:
         if cand.chunked_body_peak(n) <= max(static // 8, 1):
-            est, region = estimate_new_peak(g, prof, cand, n)
+            est, region = estimate_new_peak(g, prof, cand, n, _terms=terms)
             return n, est, region
     n = divisors[-1] if divisors else 1
-    est, region = estimate_new_peak(g, prof, cand, n)
+    est, region = estimate_new_peak(g, prof, cand, n, _terms=terms)
     return n, est, region
 
 
@@ -148,19 +183,34 @@ def rank_candidates(
     cands: List[ChunkCandidate],
     budget_bytes: int,
     hyper: CostHyper,
+    *,
+    kernel_dispatch: bool = False,
 ) -> List[Tuple[ChunkCandidate, int, int, float]]:
-    """Score every candidate; return [(cand, n, est_peak, cost)] best-first."""
+    """Score every candidate; return [(cand, n, est_peak, cost)] best-first.
+
+    With ``kernel_dispatch=True`` the selection is dispatch-aware: each
+    candidate whose loop body pattern-matches a fused Pallas kernel gets
+    ``kernel_tile_bytes`` set, so :meth:`ChunkCandidate.chunked_body_peak`
+    charges the VMEM-tile-bounded body peak instead of the full chunk-slice
+    intermediates — kernelizable regions (attention, SwiGLU) look as cheap
+    to chunk as they actually are once dispatched.
+    """
     from . import stats
 
     stats.bump("rank_calls")
     stats.bump("selection_passes")
     if not cands:
         return []
+    if kernel_dispatch:
+        from .kernel_dispatch import annotate_candidates
+
+        annotate_candidates(g, cands)
     total_flops = graph_flops(g)
     max_density = max(c.density for c in cands)
+    env = _selection_env(g, prof)
     scored = []
     for c in cands:
-        n, est, region = choose_n(g, prof, c, budget_bytes)
+        n, est, region = choose_n(g, prof, c, budget_bytes, _env=env)
         if n < 2:
             continue
         if est > prof.peak_bytes:

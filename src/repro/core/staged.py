@@ -36,10 +36,12 @@ import jax
 from jax import tree_util
 
 from . import stats
-from .codegen import build_chunked_fn, build_fn_from_plan
+from .codegen import build_fn_from_plan
 from .config import ChunkConfig, ShapeBucketer
 from .estimation import MemoryProfile, estimate_memory
 from .graph import Graph, trace
+from .kernel_dispatch import dispatch_graph
+from .lowering import apply_chunk, emit, validate_pending
 from .plan import ChunkPlan, PlanApplyError, PlanStage, as_plan_cache, plan_cache_key
 from .search import search_chunks
 from .selection import rank_candidates
@@ -205,16 +207,19 @@ def _package_result(
 # ---------------------------------------------------------------------------
 
 def _search_loop(
-    flat_fn: Callable,
-    flat_args: Sequence[Any],
-    weight_flat: Sequence[int],
     g: Graph,
     prof: MemoryProfile,
     budget_bytes: int,
     config: ChunkConfig,
 ):
-    """Greedy staged search with beam verification (paper Alg. 1 driver)."""
-    cur: Callable = flat_fn
+    """Greedy staged search with beam verification (paper Alg. 1 driver).
+
+    Each accepted stage is a pure graph rewrite
+    (:func:`~repro.core.lowering.apply_chunk`) verified by re-estimating the
+    rewritten graph — no tracing happens anywhere in the search, so the
+    compile's trace count stays independent of the stage count.
+    """
+    kd = config.resolve_kernel_dispatch()
     records: List[StageRecord] = []
     pstages: List[PlanStage] = []
     for stage in range(config.max_stages):
@@ -224,21 +229,23 @@ def _search_loop(
             g, prof, window=config.window, allow_hoist=config.allow_hoist,
             dim_blocklist=frozenset(config.dim_blocklist),
         )
-        ranked = rank_candidates(g, prof, cands, budget_bytes, config.hyper)
+        ranked = rank_candidates(
+            g, prof, cands, budget_bytes, config.hyper, kernel_dispatch=kd
+        )
         if config.verbose:
             print(
                 f"[autochunk] stage {stage}: peak={prof.peak_bytes/2**20:.1f}MiB"
                 f" budget={budget_bytes/2**20:.1f}MiB candidates={len(ranked)}"
             )
-        applied = None
-        # DP-with-beam: verify the top-`beam` candidates by true re-trace and
-        # keep the best (meets-budget, lowest cost, lowest verified peak).
-        best_key = None
+        # DP-with-beam: rewrite the top-`beam` candidates (no tracing),
+        # re-estimate, keep the best (meets-budget, lowest cost, lowest
+        # estimated peak).  Only the winner pays the abstract body eval;
+        # a validation failure falls through to the next-best rewrite.
         cur_metric = _progress_metric(prof)
+        verified = []
         for cand, n, est, cost in ranked[: config.beam]:
             try:
-                new_fn = build_chunked_fn(g, cand, n)
-                g2, _ = trace(new_fn, flat_args, weight_argnums=weight_flat)
+                g2 = apply_chunk(g, cand, n, validate=False)
                 prof2 = estimate_memory(g2)
             except Exception:
                 continue
@@ -251,12 +258,18 @@ def _search_loop(
                 if not over
                 else (over,) + _progress_metric(prof2) + (cost,)
             )
-            if best_key is None or key < best_key:
-                best_key = key
-                applied = (cand, n, cost, new_fn, g2, prof2)
+            verified.append((key, cand, n, cost, g2, prof2))
+        applied = None
+        for key, cand, n, cost, g2, prof2 in sorted(verified, key=lambda t: t[0]):
+            try:
+                validate_pending(g2)
+            except Exception:
+                continue
+            applied = (cand, n, cost, g2, prof2)
+            break
         if applied is None:
             break
-        cand, n, cost, new_fn, g2, prof2 = applied
+        cand, n, cost, g2, prof2 = applied
         records.append(
             StageRecord(
                 stage=stage,
@@ -276,29 +289,25 @@ def _search_loop(
                 peak_before=prof.peak_bytes, peak_after=prof2.peak_bytes,
             )
         )
-        cur, g, prof = new_fn, g2, prof2
-    return cur, g, prof, records, pstages
+        g, prof = g2, prof2
+    return g, prof, records, pstages
 
 
-def _search_with_anneal(
-    flat_fn, flat_args, weight_flat, g0, prof0, budget_bytes, config
-):
+def _search_with_anneal(g0, prof0, budget_bytes, config):
     """Search, then budget-anneal: the analytic per-stage estimate is
     optimistic for loose budgets, so a missed target retries the whole
     pipeline against a tighter internal budget and keeps whichever plan
-    verifies lower."""
-    cur, g, prof, records, pstages = _search_loop(
-        flat_fn, flat_args, weight_flat, g0, prof0, budget_bytes, config
-    )
+    estimates lower."""
+    g, prof, records, pstages = _search_loop(g0, prof0, budget_bytes, config)
     if prof.peak_bytes > budget_bytes and config.anneal > 0 and pstages:
         retry = _search_with_anneal(
-            flat_fn, flat_args, weight_flat, g0, prof0,
+            g0, prof0,
             max(budget_bytes // 2, 1),
             config.with_(anneal=config.anneal - 1),
         )
-        if retry[2].peak_bytes < prof.peak_bytes:
+        if retry[1].peak_bytes < prof.peak_bytes:
             return retry
-    return cur, g, prof, records, pstages
+    return g, prof, records, pstages
 
 
 # ---------------------------------------------------------------------------
@@ -411,10 +420,20 @@ class Traced:
             stats.bump("plan_bucket_misses")
             cf.counters["bucket_misses"] += 1
 
-        cur, g, prof, records, pstages = _search_with_anneal(
-            self.flat_fn, self.flat_args, self.weight_flat,
+        lowered, prof, records, pstages = _search_with_anneal(
             self.graph, self.profile, self.budget_bytes, config,
         )
+        # single-lowering emission: the multi-stage plan was applied as
+        # graph rewrites above; dispatch + emit + ONE verification re-trace
+        # happen here regardless of how many stages were applied
+        if pstages:
+            if config.resolve_kernel_dispatch():
+                dispatch_graph(lowered)
+            cur = emit(lowered)
+            g, _ = trace(cur, self.flat_args, weight_argnums=self.weight_flat)
+            prof = estimate_memory(g)
+        else:  # nothing chunked: the baseline graph is the program
+            cur, g, prof = self.flat_fn, self.graph, self.profile
         plan = ChunkPlan(
             cache_key=ckey,
             budget_bytes=self.budget_bytes,
@@ -436,11 +455,17 @@ class Traced:
         return Planned(
             traced=self, plan=plan, records=records,
             flat_fn=cur, graph=g, profile=prof,
+            lowered_graph=lowered,
             from_cache=False, bucket_hit=False,
         )
 
     def _replay(self, saved: ChunkPlan, *, rescale: bool) -> Optional["Planned"]:
-        """Apply a stored plan to this trace; None means fall back to search."""
+        """Apply a stored plan to this trace; None means fall back to search.
+
+        Replay is lowering-backed: K stage rewrites on the already-traced
+        baseline graph, one emit, ONE verification re-trace — the only
+        trace of the whole warm path, independent of the stage count.
+        """
         rec: List[Tuple[Graph, Any, int]] = []
         try:
             fn, g, prof = build_fn_from_plan(
@@ -449,6 +474,7 @@ class Traced:
                 baseline_graph=self.graph,
                 rescale=rescale,
                 record=rec,
+                kernel_dispatch=self.cf.config.resolve_kernel_dispatch(),
             )
         except PlanApplyError:
             stats.bump("plan_replay_failures")
@@ -512,10 +538,32 @@ class Traced:
 
 
 @dataclass
+class Lowered:
+    """Product of :meth:`Planned.lower`: the final rewritten program.
+
+    ``jaxpr``  the verified ``ClosedJaxpr`` of the emitted single callable
+               (prefix/hoisted/suffix inline, one ``scan`` per chunk stage)
+    ``graph``  the rewritten :class:`Graph` with its structured
+               ``chunk_loop`` nodes, when produced by a cold compile
+               (``None`` on plan replays, which skip the intermediate form)
+    """
+
+    jaxpr: Any
+    graph: Optional[Graph] = None
+
+    def as_text(self) -> str:
+        return str(self.jaxpr)
+
+    def eqn_count(self) -> int:
+        return len(self.jaxpr.jaxpr.eqns)
+
+
+@dataclass
 class Planned:
     """Stage 2: a finished chunk search — the :class:`ChunkPlan` plus the
     verified rewritten callable.  Inspect/serialize the plan (``.plan``,
-    ``.save()``) before deciding to pay for codegen + jit."""
+    ``.save()``) or ``.lower()`` to the rewritten jaxpr before deciding to
+    pay for jit."""
 
     traced: Traced
     plan: ChunkPlan
@@ -523,6 +571,7 @@ class Planned:
     flat_fn: Callable
     graph: Graph
     profile: MemoryProfile
+    lowered_graph: Optional[Graph] = None
     from_cache: bool = False
     bucket_hit: bool = False
 
@@ -540,6 +589,18 @@ class Planned:
 
     def save(self, path) -> None:
         self.plan.save(path)
+
+    def lower(self) -> Lowered:
+        """Expose the final rewritten jaxpr (for inspection, cross-process
+        codegen, or AOT pipelines that want the IR rather than a callable).
+
+        The jaxpr comes from the single verification re-trace the search or
+        replay already performed — calling ``lower()`` never re-traces.
+        """
+        return Lowered(
+            jaxpr=getattr(self.graph, "closed_jaxpr", None),
+            graph=self.lowered_graph,
+        )
 
     def compile(self) -> "CompiledFunction":
         """Stage 3: package the plan's callable (codegen already verified)."""

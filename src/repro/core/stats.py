@@ -20,6 +20,18 @@ _COUNTERS: Dict[str, int] = {
     "search_passes": 0,
     "selection_passes": 0,
     "codegen_calls": 0,
+    # jaxpr-native lowering backend (core.lowering): ``lowering_rewrites``
+    # counts every apply_chunk (beam candidates included on the cold search
+    # path; exactly one per stage on plan replay), ``lowering_emits`` one
+    # per compiled plan.  ``lowering_emits`` together with ``trace_calls``
+    # proves the single-lowering contract: a K-stage plan emits once and
+    # re-traces once, independent of K.
+    "lowering_rewrites": 0,
+    "lowering_emits": 0,
+    # Pallas kernel dispatch (core.kernel_dispatch): chunk-loop bodies
+    # swapped for fused kernels vs bodies examined and left as scan codegen.
+    "kernel_dispatch_hits": 0,
+    "kernel_dispatch_misses": 0,
     "plan_cache_hits": 0,
     "plan_cache_misses": 0,
     "plan_replays": 0,

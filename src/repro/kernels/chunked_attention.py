@@ -69,6 +69,93 @@ def _attn_kernel(
         o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _masked_attn_kernel(
+    q_ref, k_ref, v_ref, mask_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *, scale: float,
+):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)          # (bkv, hd)
+    v = v_ref[0].astype(jnp.float32)          # (bkv, hd)
+    s = q @ k.T * scale                        # (bq, bkv)
+    s = jnp.where(mask_ref[0], s, NEG_INF)
+
+    m_prev = m_ref[...]                        # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                     # (bq, bkv)
+    alpha = jnp.exp(m_prev - m_new)            # (bq, 1)
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + p @ v
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def masked_attention(
+    q, k, v, mask, *,
+    scale: float,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+):
+    """Flat fused attention with an explicit boolean mask (kernel dispatch).
+
+    ``q``: (N, Sq, hd); ``k``/``v``: (N, Skv, hd); ``mask``: (Nm, Sq, Skv)
+    with Nm in {1, N} (True = attend).  This is the target the graph-level
+    kernel-dispatch pass lowers matched softmax-attention loop bodies onto:
+    masking stays fully general (causal / sliding-window / arbitrary), the
+    (Sq, Skv) logits never materialize in HBM, and the online-softmax
+    accumulator reproduces exp/sum/div semantics of the scan body exactly
+    (masked logits pinned at -1e30 on both paths).
+    """
+    N, Sq, hd = q.shape
+    Skv = k.shape[1]
+    Nm = mask.shape[0]
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv)
+    assert Sq % bq == 0 and Skv % bkv == 0, (Sq, bq, Skv, bkv)
+    assert Nm in (1, N), (Nm, N)
+
+    grid = (N, Sq // bq, Skv // bkv)
+    kernel = functools.partial(_masked_attn_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec(
+                (1, bq, bkv),
+                (lambda b, qi, ki: (b, qi, ki))
+                if Nm > 1
+                else (lambda b, qi, ki: (0, qi, ki)),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, mask)
+
+
 def chunked_attention(
     q, k, v, *,
     causal: bool = True,

@@ -14,11 +14,19 @@ import jax
 import jax.numpy as jnp
 
 from .chunked_attention import chunked_attention as _attn
+from .chunked_attention import masked_attention as _masked_attn
 from .chunked_ffn import chunked_ffn as _ffn
 from .rglru_scan import rglru_scan as _rglru
 from .ssd_scan import ssd_scan as _ssd
 
 INTERPRET = jax.default_backend() != "tpu"
+
+
+def _fit_block(size: int, block: int) -> int:
+    b = min(block, size)
+    while size % b:
+        b //= 2
+    return max(b, 1)
 
 
 def _expand_gqa(k, H):
@@ -58,6 +66,22 @@ def swiglu_ffn(x, w_gate, w_up, w_down, *, block_s=128, block_f=512):
         bf //= 2
     return _ffn(x, w_gate, w_up, w_down, block_s=max(bs, 1), block_f=max(bf, 1),
                 interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("scale", "block_q", "block_kv"))
+def masked_attention(q, k, v, mask, *, scale, block_q=128, block_kv=128):
+    """Flat masked fused attention — the kernel-dispatch target.
+
+    ``q``: (N, Sq, hd); ``k``/``v``: (N, Skv, hd); ``mask``: (Nm, Sq, Skv)
+    boolean, Nm in {1, N}.  Block sizes shrink to divide the (possibly odd,
+    chunk-loop-sized) sequence extents.
+    """
+    bq = _fit_block(q.shape[1], block_q)
+    bkv = _fit_block(k.shape[1], block_kv)
+    return _masked_attn(
+        q, k, v, mask, scale=scale,
+        block_q=bq, block_kv=bkv, interpret=INTERPRET,
+    )
 
 
 @partial(jax.jit, static_argnames=("chunk",))

@@ -19,6 +19,7 @@ import jax
 import numpy as np
 
 from ..configs import get_config
+from ..core import stats
 from ..models import model as M
 from ..serving import Request, ServeEngine
 
@@ -84,6 +85,14 @@ def main(argv=None):
           f" ({toks/dt:.1f} tok/s, {engine.n_decode_steps} decode waves)")
     if engine.plan_cache is not None:
         print(f"[serve] plan cache stats: {engine.plan_cache.stats()}")
+    snap = stats.snapshot()
+    print(
+        "[serve] codegen stats:"
+        f" lowering_emits={snap['lowering_emits']}"
+        f" trace_calls={snap['trace_calls']}"
+        f" kernel_dispatch_hits={snap['kernel_dispatch_hits']}"
+        f" kernel_dispatch_misses={snap['kernel_dispatch_misses']}"
+    )
     for r in done[:3]:
         print(f"  req {r.rid}: {r.generated[:8]}...")
 

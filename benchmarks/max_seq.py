@@ -49,3 +49,54 @@ def run(csv_rows):
          f"autochunk_max={chunk_max};extension={ext:.1f}x")
     )
     return csv_rows
+
+
+def run_smoke(csv_rows):
+    """CI-sized variant of the Fig.-1 sweep: two tiny lengths, one layer.
+
+    Asserts the monotone contract the full sweep measures — chunked peak
+    never exceeds baseline, and the longer sequence chunks at least as hard
+    — without the minutes-long 8k sweep.  Exercised nightly via
+    ``python -m benchmarks.max_seq --smoke``.
+    """
+    reductions = []
+    for s in (64, 128):
+        cfg, params, batch, fwd = gpt_block_model(s, n_layers=1, d=64)
+        base = peak_activation(fwd, (params, batch))
+        res = chunked(fwd, (params, batch), budget_ratio=0.4)
+        if res.final_peak > base:
+            raise AssertionError(
+                f"max_seq smoke: chunked peak {res.final_peak} exceeds"
+                f" baseline {base} at seq {s}"
+            )
+        reductions.append(1 - res.final_peak / base)
+        csv_rows.append(
+            (f"fig1_smoke_s{s}", 0.0,
+             f"base_MiB={base/2**20:.2f};chunk_MiB={res.final_peak/2**20:.2f}")
+        )
+    if reductions[-1] < reductions[0] - 0.05:
+        raise AssertionError(
+            "max_seq smoke: peak reduction shrank with sequence length"
+            f" ({[f'{r:.2f}' for r in reductions]}) — the S^2/S growth"
+            " contract regressed"
+        )
+    return csv_rows
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.max_seq")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI leg: assert the chunked-peak contract on"
+                         " two small lengths instead of the full sweep")
+    args = ap.parse_args(argv)
+    rows = []
+    (run_smoke if args.smoke else run)(rows)
+    for name, _, derived in rows:
+        print(f"{name},{derived}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -4,7 +4,7 @@ from .api import AutoChunkResult, StageRecord, autochunk, build_autochunk
 from .codegen import build_chunked_fn, build_fn_from_plan, graph_to_fn
 from .config import ChunkConfig, ShapeBucketer
 from .kernel_dispatch import dispatch_graph
-from .lowering import ChunkLoopEqn, apply_chunk, emit
+from .lowering import ChunkLoopEqn, apply_chunk, emit, emit_padded_call
 from .staged import ChunkedFunction, CompiledFunction, Lowered, Planned, Traced
 from .estimation import MemoryProfile, estimate_memory
 from .graph import Graph, dim_stride, eqn_flops, graph_flops, trace
@@ -36,6 +36,7 @@ __all__ = [
     "ChunkLoopEqn",
     "apply_chunk",
     "emit",
+    "emit_padded_call",
     "dispatch_graph",
     "Lowered",
     "MemoryProfile",

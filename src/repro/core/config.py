@@ -59,6 +59,22 @@ class ChunkConfig:
                         ``'auto'`` (dispatch on TPU, scan codegen elsewhere),
                         ``'on'`` (always dispatch — interpret mode on CPU),
                         ``'off'`` (always scan codegen)
+    ``canonical_bucket_exec``
+                        compile ONE executable per shape bucket, at the
+                        bucket's canonical (boundary) shape, and serve every
+                        other length in the bucket by right-padding inputs to
+                        the boundary and slicing outputs back.  Requires the
+                        function to be *length-masked*: real outputs must not
+                        depend on padded buffer content (e.g. attention
+                        masked by a true-length/position argument).  Feeds
+                        the bucket cache key.  Off by default because plain
+                        unmasked functions (softmax over a padded axis) are
+                        not pad-safe.
+    ``cache_max_entries`` / ``cache_policy``
+                        plan-cache eviction knobs (``'lru'`` or
+                        ``'cost_lfu'``) used by callers that own a
+                        :class:`~repro.core.plan.PlanCache`; operational
+                        only, never part of the cache identity
     ``verbose``         per-stage progress printing (not part of the key)
     """
 
@@ -74,6 +90,9 @@ class ChunkConfig:
     dim_blocklist: Tuple[int, ...] = ()
     anneal: int = 2
     kernel_dispatch: str = "auto"
+    canonical_bucket_exec: bool = False
+    cache_max_entries: Optional[int] = None
+    cache_policy: str = "lru"
     verbose: bool = False
 
     def __post_init__(self):
@@ -105,6 +124,19 @@ class ChunkConfig:
                 "kernel_dispatch must be 'auto', 'on', or 'off',"
                 f" got {self.kernel_dispatch!r}"
             )
+        from .plan import PlanCache
+
+        if self.cache_policy not in PlanCache.POLICIES:
+            raise ValueError(
+                f"cache_policy must be one of {PlanCache.POLICIES}, got"
+                f" {self.cache_policy!r}"
+            )
+        if self.cache_max_entries is not None:
+            if not isinstance(self.cache_max_entries, int) or self.cache_max_entries < 0:
+                raise ValueError(
+                    "cache_max_entries must be None or an int >= 0, got"
+                    f" {self.cache_max_entries!r}"
+                )
         if not isinstance(self.hyper, CostHyper):
             raise ValueError(
                 f"hyper must be a CostHyper, got {type(self.hyper).__name__}"
@@ -179,12 +211,20 @@ class ChunkConfig:
     def to_dict(self) -> Dict[str, Any]:
         d = asdict(self)
         d.pop("verbose")  # presentation only, never part of identity
+        # eviction knobs are operational (when/what to evict), not search
+        # identity; canonical_bucket_exec STAYS — a plan searched at the
+        # bucket boundary must not be silently replayed by a non-canonical
+        # consumer at a different shape regime
+        d.pop("cache_max_entries")
+        d.pop("cache_policy")
         return d
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "ChunkConfig":
         d = dict(d)
         d.pop("verbose", None)
+        d.pop("cache_max_entries", None)
+        d.pop("cache_policy", None)
         hyper = d.pop("hyper", None)
         if isinstance(hyper, dict):
             hyper = CostHyper(**hyper)
@@ -193,8 +233,16 @@ class ChunkConfig:
         })
 
     def cache_token(self) -> str:
-        """Stable digest of everything that can change a search result."""
-        blob = json.dumps(self.to_dict(), sort_keys=True, separators=(",", ":"))
+        """Stable digest of everything that can change a search result.
+
+        ``kernel_dispatch`` is hashed at its *resolved* value (not the
+        ``'auto'`` spelling), matching :meth:`search_knobs`: a plan searched
+        with dispatch-aware costs on TPU must miss the bucket key on a CPU
+        host rather than replay silently.
+        """
+        d = self.to_dict()
+        d["kernel_dispatch"] = self.resolve_kernel_dispatch()
+        blob = json.dumps(d, sort_keys=True, separators=(",", ":"))
         return hashlib.sha256(blob.encode()).hexdigest()
 
 
@@ -242,6 +290,23 @@ class ShapeBucketer:
 
     def bucket_shape(self, shape: Sequence[int]) -> Tuple[int, ...]:
         return tuple(self.bucket_dim(s) for s in shape)
+
+    # -- canonical shapes ---------------------------------------------------
+    # The canonical shape of a bucket is its upper boundary: the single
+    # shape a bucket *executable* is compiled at
+    # (``ChunkConfig.canonical_bucket_exec``).  Every other shape in the
+    # bucket is served by right-padding up to it.  ``bucket_dim`` already
+    # returns the boundary, so these are semantic aliases kept separate so
+    # call sites read as "compile at the canonical shape", not "hash into a
+    # bucket".
+
+    def canonical_dim(self, size: int) -> int:
+        """Bucket upper boundary for one dim (== the padded extent)."""
+        return self.bucket_dim(size)
+
+    def canonical_shape(self, shape: Sequence[int]) -> Tuple[int, ...]:
+        """The shape a bucket executable is compiled at for ``shape``."""
+        return self.bucket_shape(shape)
 
     def signature(self, avals) -> Tuple[Tuple[Tuple[int, ...], str], ...]:
         """Bucketed (shape, dtype) signature of a flat aval sequence."""

@@ -458,3 +458,92 @@ def emit(g: Graph) -> Callable[..., Tuple[Any, ...]]:
         return tuple(env[ov] if is_var(ov) else ov.val for ov in outvars)
 
     return fn
+
+
+# ---------------------------------------------------------------------------
+# Padded calls (canonical-shape bucket executables)
+# ---------------------------------------------------------------------------
+#
+# ``ChunkConfig.canonical_bucket_exec`` compiles ONE executable per shape
+# bucket, at the bucket's canonical (boundary) shape.  Every other length in
+# the bucket is served by the wrapper below: right-pad inputs with zeros up
+# to the canonical shape, call the canonical executable (same input
+# signature every time, so zero traces and zero XLA compiles), then slice
+# outputs back to the true shapes.
+#
+# Semantics contract: the wrapped function must be *length-masked* — real
+# output positions must not depend on padded buffer content.  That holds
+# when attention masks / position logic are computed from a true-length or
+# position argument that passes through unpadded (scalars and sub-min_dim
+# axes are never padded), exactly like a serving decode step masked by its
+# position counter.  The padded output rows/columns are garbage and are
+# sliced off; everything kept is bitwise what the unpadded executable would
+# have produced under the same mask.
+
+
+def pad_to_shape(x, shape: Sequence[int]):
+    """Right-pad ``x`` with zeros up to ``shape`` (no-op when equal)."""
+    target = tuple(int(s) for s in shape)
+    x = jnp.asarray(x)
+    if tuple(x.shape) == target:
+        return x
+    if len(target) != x.ndim or any(t < s for s, t in zip(x.shape, target)):
+        raise ValueError(
+            f"cannot pad shape {tuple(x.shape)} up to {target}"
+        )
+    pads = [(0, t - s, 0) for s, t in zip(x.shape, target)]
+    return lax.pad(x, jnp.zeros((), x.dtype), pads)
+
+
+def slice_to_shape(y, shape: Sequence[int]):
+    """Slice ``y`` back down to ``shape`` (no-op when equal)."""
+    target = tuple(int(s) for s in shape)
+    if tuple(y.shape) == target:
+        return y
+    if len(target) != y.ndim or any(t > s for s, t in zip(y.shape, target)):
+        raise ValueError(
+            f"cannot slice shape {tuple(y.shape)} down to {target}"
+        )
+    return y[tuple(slice(0, t) for t in target)]
+
+
+def emit_padded_call(fn: Callable, arg_specs, out_specs) -> Callable:
+    """Wrap a canonical-shape callable with the pad/unpad protocol.
+
+    ``fn``         callable compiled at the bucket's canonical shapes
+                   (original pytree signature)
+    ``arg_specs``  pytree of ``ShapeDtypeStruct`` giving the canonical input
+                   shapes ``fn`` was compiled at
+    ``out_specs``  pytree of ``ShapeDtypeStruct`` giving the TRUE output
+                   shapes for the caller's actual input shapes (from
+                   ``jax.eval_shape`` at the true shapes — abstract only,
+                   never an XLA compile)
+
+    The returned callable takes true-shape args, pads each leaf up to its
+    canonical spec, invokes ``fn`` (whose jit signature therefore never
+    changes inside a bucket), and slices every output leaf down to its true
+    spec.  Dim provenance is exact: outputs are cut to the shapes the
+    function genuinely produces at the true input shapes, so an output axis
+    that merely *coincides* with a padded extent is never mis-sliced.
+    """
+    from jax import tree_util
+
+    flat_specs, spec_tree = tree_util.tree_flatten(arg_specs)
+
+    def padded_call(*args):
+        leaves, in_tree = tree_util.tree_flatten(tuple(args))
+        if in_tree != spec_tree or len(leaves) != len(flat_specs):
+            raise ValueError(
+                "padded call arg structure does not match the canonical"
+                " executable's signature"
+            )
+        stats.bump("padded_calls")
+        padded = [
+            pad_to_shape(x, s.shape) for x, s in zip(leaves, flat_specs)
+        ]
+        out = fn(*tree_util.tree_unflatten(in_tree, padded))
+        return jax.tree.map(
+            lambda y, sp: slice_to_shape(y, sp.shape), out, out_specs
+        )
+
+    return padded_call

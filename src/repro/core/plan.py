@@ -40,6 +40,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from jax.extend import core as jex_core
 
+from . import stats
 from .graph import Graph, Var, is_var
 from .search import ChunkCandidate
 
@@ -393,6 +394,7 @@ class PlanCache:
     """
 
     BUCKET_SUBDIR = "buckets"
+    POLICIES = ("lru", "cost_lfu")
 
     def __init__(self, path: Optional[Any] = None):
         self._mem: Dict[str, ChunkPlan] = {}
@@ -404,6 +406,12 @@ class PlanCache:
         self.misses = 0
         self.bucket_hits = 0
         self.bucket_misses = 0
+        self.evictions = 0
+        # per-plan serving telemetry (process-local): hit counts, last-use
+        # timestamps, compile cost, per-bucket use.  Disk recency is kept in
+        # the file mtime (refreshed on every hit) so LRU works across
+        # processes sharing a cache directory.
+        self._telemetry: Dict[str, Dict[str, Any]] = {}
 
     # ------------------------------------------------------------------
     def _disk_path(self, key: str) -> Optional[Path]:
@@ -437,6 +445,11 @@ class PlanCache:
             self.misses += 1
         else:
             self.hits += 1
+            # seed compile_s from the persisted meta too: a warm process
+            # must score this plan by the search cost it *saves*, not by
+            # its own cheap replay time (cost_lfu would otherwise evict
+            # exactly the expensive plans it exists to protect)
+            self.record_use(key, compile_s=plan.meta.get("compile_s"))
         return plan
 
     def put(self, key: str, plan: ChunkPlan) -> None:
@@ -444,6 +457,52 @@ class PlanCache:
         p = self._disk_path(key)
         if p is not None:
             plan.save(p)
+        self.record_use(
+            key, hit=False, compile_s=plan.meta.get("compile_s")
+        )
+
+    # -- serving telemetry ---------------------------------------------------
+    def record_use(
+        self,
+        key: str,
+        *,
+        hit: bool = True,
+        compile_s: Optional[float] = None,
+        bucket: Optional[Any] = None,
+        now: Optional[float] = None,
+    ) -> Dict[str, Any]:
+        """Record one use of plan ``key`` into its entry metadata.
+
+        Serving layers call this (the cache's own ``get``/``put`` do too) so
+        eviction policies can see hit counts, last-use recency, the compile
+        cost the plan saves, and which shape buckets exercised it.  For
+        disk-backed entries the file mtime is refreshed as the cross-process
+        recency signal.
+        """
+        now = time.time() if now is None else now
+        m = self._telemetry.setdefault(
+            key,
+            {"hits": 0, "last_used": now, "compile_s": 0.0, "buckets": {}},
+        )
+        if hit:
+            m["hits"] += 1
+        m["last_used"] = now
+        if compile_s is not None:
+            m["compile_s"] = max(m["compile_s"], float(compile_s))
+        if bucket is not None:
+            b = str(bucket)
+            m["buckets"][b] = m["buckets"].get(b, 0) + 1
+        p = self._disk_path(key)
+        if p is not None and p.exists():
+            try:
+                os.utime(p, (now, now))
+            except OSError:
+                pass
+        return m
+
+    def entry_meta(self, key: str) -> Dict[str, Any]:
+        """Telemetry record for one plan (empty dict when never seen)."""
+        return dict(self._telemetry.get(key, {}))
 
     def get_bucket(self, key: str) -> Optional[ChunkPlan]:
         """Look up a plan by shape-bucket key (never counted in ``len``)."""
@@ -456,6 +515,20 @@ class PlanCache:
             self.bucket_misses += 1
         else:
             self.bucket_hits += 1
+            # a bucket hit is a use of the HOME plan: record telemetry (and
+            # refresh recency) under its cache key, plus the alias file's
+            # mtime, so eviction never reads an actively-replayed plan as
+            # cold just because traffic arrives through its alias
+            self.record_use(
+                plan.cache_key or f"alias:{key}",
+                compile_s=plan.meta.get("compile_s"),
+            )
+            p = self._bucket_disk_path(key)
+            if p is not None and p.exists():
+                try:
+                    os.utime(p)
+                except OSError:
+                    pass
         return plan
 
     def put_bucket(self, key: str, plan: ChunkPlan) -> None:
@@ -482,6 +555,7 @@ class PlanCache:
     def clear(self, *, disk: bool = False) -> None:
         self._mem.clear()
         self._mem_buckets.clear()
+        self._telemetry.clear()
         if disk and self.path is not None:
             for p in self.path.glob("*.json"):
                 try:
@@ -494,6 +568,170 @@ class PlanCache:
                 except OSError:
                     pass
 
+    # -- eviction -----------------------------------------------------------
+    def _records(self) -> List[Dict[str, Any]]:
+        """One record per plan, with its bucket aliases attached.
+
+        This is the accounting unit every eviction policy sees: a plan's
+        bucket aliases (memory and ``buckets/`` files whose stored
+        ``cache_key`` names the plan) ride along with it — they are never a
+        second countable entry, and evicting the plan removes them too.  An
+        orphaned alias (its plan already gone) forms its own record so it
+        cannot leak forever.
+        """
+        recs: Dict[str, Dict[str, Any]] = {}
+
+        def rec(key: str) -> Dict[str, Any]:
+            return recs.setdefault(
+                key,
+                {
+                    "key": key,
+                    "mem_keys": [],
+                    "paths": [],
+                    "alias_mem_keys": [],
+                    "alias_paths": [],
+                    "mtime": None,
+                },
+            )
+
+        for key in self._mem:  # insertion order == recency tiebreak
+            rec(key)["mem_keys"].append(key)
+        if self.path is not None:
+            for p in self.path.glob("*.json"):
+                r = rec(p.stem)
+                r["paths"].append(p)
+                try:
+                    r["mtime"] = max(r["mtime"] or 0.0, p.stat().st_mtime)
+                except OSError:
+                    pass
+        for bkey, plan in self._mem_buckets.items():
+            r = rec(plan.cache_key or f"alias:{bkey}")
+            r["alias_mem_keys"].append(bkey)
+        if self.path is not None:
+            for p in self.path.glob(f"{self.BUCKET_SUBDIR}/*.json"):
+                try:
+                    target = json.loads(p.read_text()).get("cache_key")
+                except (OSError, ValueError):
+                    target = None
+                r = rec(target or f"alias:{p.stem}")
+                r["alias_paths"].append(p)
+                if not r["paths"] and not r["mem_keys"]:
+                    try:
+                        r["mtime"] = max(
+                            r["mtime"] or 0.0, p.stat().st_mtime
+                        )
+                    except OSError:
+                        pass
+        return list(recs.values())
+
+    def _recency(self, r: Dict[str, Any], now: float) -> float:
+        # disk-backed records: mtime is the shared-directory signal (get()
+        # and record_use() refresh it); memory-only records fall back to
+        # process-local telemetry
+        if r["paths"] or (r["alias_paths"] and not r["mem_keys"]):
+            if r["mtime"] is not None:
+                return r["mtime"]
+        t = self._telemetry.get(r["key"], {}).get("last_used")
+        return t if t is not None else now
+
+    def _remove_record(self, r: Dict[str, Any]) -> None:
+        for k in r["mem_keys"]:
+            self._mem.pop(k, None)
+        for k in r["alias_mem_keys"]:
+            self._mem_buckets.pop(k, None)
+        for p in r["paths"] + r["alias_paths"]:
+            try:
+                p.unlink()
+            except OSError:
+                pass
+        self._telemetry.pop(r["key"], None)
+
+    def evict(
+        self,
+        *,
+        policy: str = "lru",
+        max_entries: Optional[int] = None,
+        max_age_s: Optional[float] = None,
+        now: Optional[float] = None,
+    ) -> int:
+        """Telemetry-driven eviction; returns the number of plans removed.
+
+        ``max_age_s`` first drops plans not used within that window, then
+        ``max_entries`` trims the survivors down by ``policy``:
+
+        * ``'lru'``       drop the least-recently-used plans
+        * ``'cost_lfu'``  cost-weighted LFU — the keep-set is the plans with
+                          the highest ``(hits + 1) * compile_cost`` score
+                          (recency breaks ties), so a rarely-hit-but-huge
+                          compile survives over a cheap frequently-rebuilt
+                          one of equal traffic
+
+        Counting is per *plan*: bucket aliases ride with their plan's record
+        (see :meth:`_records`) and are removed together with it.
+        """
+        if policy not in self.POLICIES:
+            raise ValueError(
+                f"policy must be one of {self.POLICIES}, got {policy!r}"
+            )
+        if max_entries is not None and max_entries < 0:
+            raise ValueError(f"max_entries must be >= 0, got {max_entries}")
+        now = time.time() if now is None else now
+        # fast path for the common idle-point trigger: when no age bound is
+        # requested and the plan count is already within budget, skip the
+        # full record scan (which stats every file and parses every alias)
+        if max_age_s is None and (max_entries is None or len(self) <= max_entries):
+            return 0
+        recs = self._records()
+        for r in recs:
+            r["recency"] = self._recency(r, now)
+        drop: List[Dict[str, Any]] = []
+        keep: List[Dict[str, Any]] = []
+        for r in recs:
+            if max_age_s is not None and now - r["recency"] > max_age_s:
+                drop.append(r)
+            else:
+                keep.append(r)
+        if max_entries is not None and len(keep) > max_entries:
+            n_extra = len(keep) - max_entries
+            if policy == "lru":
+                keep.sort(key=lambda r: r["recency"])
+            else:  # cost_lfu: evict the lowest hit-x-cost scores first
+                def compile_cost(r: Dict[str, Any]) -> float:
+                    m = self._telemetry.get(r["key"], {})
+                    cost = float(m.get("compile_s", 0.0))
+                    if cost <= 0.0 and r["paths"]:
+                        # a disk plan this process never loaded still
+                        # carries its persisted search cost — score by what
+                        # the fleet would pay to rebuild it, not by our
+                        # empty local telemetry
+                        try:
+                            cost = float(
+                                json.loads(r["paths"][0].read_text())
+                                .get("meta", {})
+                                .get("compile_s", 0.0)
+                            )
+                        except (OSError, ValueError, TypeError):
+                            cost = 0.0
+                    return cost
+
+                def score(r: Dict[str, Any]):
+                    m = self._telemetry.get(r["key"], {})
+                    return (
+                        (m.get("hits", 0) + 1)
+                        * max(compile_cost(r), 1e-3),
+                        r["recency"],
+                    )
+
+                keep.sort(key=score)
+            drop.extend(keep[:n_extra])
+        for r in drop:
+            self._remove_record(r)
+        removed = len(drop)
+        self.evictions += removed
+        if removed:
+            stats.bump("plan_evictions", removed)
+        return removed
+
     def prune(
         self,
         *,
@@ -503,58 +741,14 @@ class PlanCache:
     ) -> int:
         """Garbage-collect the cache; returns the number of plans removed.
 
-        ``max_age_s`` drops plans older than this (on-disk mtime); for a
-        purely in-memory cache only ``max_entries`` applies (insertion
-        order, oldest first).  ``max_entries`` then keeps at most that many
-        of the newest plans.  Bucket aliases are pruned by the same policy.
+        Thin wrapper over :meth:`evict` with the LRU policy.  Accounting is
+        unified with the telemetry-bearing records: one record per plan,
+        bucket aliases counted with (and removed alongside) their plan —
+        never trimmed as an independent second population.
         """
-        if max_entries is not None and max_entries < 0:
-            raise ValueError(f"max_entries must be >= 0, got {max_entries}")
-        removed = 0
-        now = time.time() if now is None else now
-
-        def _prune_disk(paths: List[Path], mem: Dict[str, ChunkPlan]) -> int:
-            n = 0
-            # snapshot mtimes up front: the directory may be shared with
-            # other processes (including a concurrent prune), so any file
-            # can vanish between listing and stat
-            entries: List[Tuple[float, Path]] = []
-            for p in paths:
-                try:
-                    entries.append((p.stat().st_mtime, p))
-                except OSError:
-                    continue
-            entries.sort(key=lambda e: e[0])
-            drop: List[Path] = []
-            keep: List[Path] = []
-            for mtime, p in entries:
-                if max_age_s is not None and now - mtime > max_age_s:
-                    drop.append(p)
-                else:
-                    keep.append(p)
-            if max_entries is not None and len(keep) > max_entries:
-                drop.extend(keep[: len(keep) - max_entries])
-            for p in drop:
-                try:
-                    p.unlink()
-                    n += 1
-                except OSError:
-                    continue
-                mem.pop(p.stem, None)
-            return n
-
-        if self.path is not None:
-            removed += _prune_disk(list(self.path.glob("*.json")), self._mem)
-            removed += _prune_disk(
-                list(self.path.glob(f"{self.BUCKET_SUBDIR}/*.json")),
-                self._mem_buckets,
-            )
-        elif max_entries is not None:
-            for mem in (self._mem, self._mem_buckets):
-                while len(mem) > max_entries:
-                    mem.pop(next(iter(mem)))
-                    removed += 1
-        return removed
+        return self.evict(
+            policy="lru", max_entries=max_entries, max_age_s=max_age_s, now=now
+        )
 
     def stats(self) -> Dict[str, int]:
         return {
@@ -563,6 +757,7 @@ class PlanCache:
             "bucket_hits": self.bucket_hits,
             "bucket_misses": self.bucket_misses,
             "entries": len(self),
+            "evictions": self.evictions,
         }
 
 

@@ -41,7 +41,7 @@ from .config import ChunkConfig, ShapeBucketer
 from .estimation import MemoryProfile, estimate_memory
 from .graph import Graph, trace
 from .kernel_dispatch import dispatch_graph
-from .lowering import apply_chunk, emit, validate_pending
+from .lowering import apply_chunk, emit, emit_padded_call, validate_pending
 from .plan import ChunkPlan, PlanApplyError, PlanStage, as_plan_cache, plan_cache_key
 from .search import search_chunks
 from .selection import rank_candidates
@@ -647,6 +647,21 @@ class CompiledFunction:
     def report(self) -> str:
         return self.result.report()
 
+    def xla_cache_size(self) -> Optional[int]:
+        """Number of XLA executables behind the lazy jit (None if unknown).
+
+        The one-executable-per-bucket invariant is stated in these terms: a
+        canonical bucket executable's cache size stays 1 no matter how many
+        distinct lengths inside the bucket it serves (padded calls reuse the
+        canonical input signature).
+        """
+        if self._jitted is None:
+            return 0
+        try:
+            return int(self._jitted._cache_size())
+        except AttributeError:  # older/newer jax without the private probe
+            return None
+
     def __call__(self, *args):
         if self._jitted is None:
             self._jitted = jax.jit(self.fn)
@@ -694,12 +709,19 @@ class ChunkedFunction:
         )
         self._bucket_plans: Dict[str, ChunkPlan] = {}
         self._compiled: Dict[Any, CompiledFunction] = {}
+        # canonical-shape bucket executables: one CompiledFunction per bucket
+        # signature, compiled at the bucket boundary; `_padded` memoizes the
+        # pad/unpad wrapper per exact (non-canonical) input signature
+        self._bucket_execs: Dict[Any, CompiledFunction] = {}
+        self._padded: Dict[Any, Callable] = {}
         self.counters: Dict[str, int] = {
             "calls": 0,
             "compiles": 0,
             "shape_hits": 0,
             "bucket_hits": 0,
             "bucket_misses": 0,
+            "bucket_exec_hits": 0,
+            "bucket_exec_compiles": 0,
         }
         functools.update_wrapper(self, fn, updated=())
 
@@ -712,7 +734,19 @@ class ChunkedFunction:
 
     def compile(self, *example_args) -> CompiledFunction:
         """One-shot AOT: ``trace -> search -> compile`` for these args."""
-        return self.trace(*example_args).search().compile()
+        compiled = self.trace(*example_args).search().compile()
+        self._maybe_evict()
+        return compiled
+
+    def _maybe_evict(self) -> int:
+        """Honor the config's eviction knobs after a compile touched the
+        plan cache (a compile is the only point this transform grows it)."""
+        cfg = self.config
+        if self.cache is None or cfg.cache_max_entries is None:
+            return 0
+        return self.cache.evict(
+            policy=cfg.cache_policy, max_entries=cfg.cache_max_entries
+        )
 
     # -- direct call --------------------------------------------------------
     def _shape_key(self, args) -> Any:
@@ -723,13 +757,83 @@ class ChunkedFunction:
         self.counters["calls"] += 1
         key = self._shape_key(args)
         compiled = self._compiled.get(key)
-        if compiled is None:
-            self.counters["compiles"] += 1
-            compiled = self.compile(*args)
-            self._compiled[key] = compiled
-        else:
+        if compiled is not None:
             self.counters["shape_hits"] += 1
+            return compiled(*args)
+        padded_fn = self._padded.get(key)
+        if padded_fn is not None:
+            # an already-wrapped non-canonical length: pure pad -> canonical
+            # executable -> slice; still a bucket-executable hit
+            self.counters["shape_hits"] += 1
+            self.counters["bucket_exec_hits"] += 1
+            stats.bump("bucket_exec_hits")
+            return padded_fn(*args)
+        if self.config.canonical_bucket_exec and self.bucketer is not None:
+            return self._canonical_call(key, args)
+        self.counters["compiles"] += 1
+        compiled = self.compile(*args)
+        self._compiled[key] = compiled
         return compiled(*args)
+
+    # -- canonical-shape bucket executables ---------------------------------
+    def _canonical_specs(self, args):
+        """Bucket signature + canonical ShapeDtypeStruct args for ``args``.
+
+        Non-weight leaves are rounded up to the bucket boundary (the
+        canonical shape the bucket executable compiles at); weight leaves
+        keep their exact shapes — padding parameters would change the
+        program, and weight shapes do not vary across serving traffic.
+        """
+        flat, in_tree, weight_flat = _flatten_spec(
+            args, self.config.weight_argnums
+        )
+        wset = frozenset(weight_flat)
+        canon: List[Tuple[Tuple[int, ...], str]] = []
+        needs_pad = False
+        for i, leaf in enumerate(flat):
+            shape, dtype = _leaf_aval(leaf)
+            cshape = (
+                shape if i in wset else self.bucketer.canonical_shape(shape)
+            )
+            if cshape != shape:
+                needs_pad = True
+            canon.append((cshape, dtype))
+        key = (str(in_tree), tuple(canon))
+        spec_args = tree_util.tree_unflatten(
+            in_tree, [jax.ShapeDtypeStruct(s, d) for s, d in canon]
+        )
+        return key, spec_args, needs_pad
+
+    def _canonical_call(self, key, args):
+        """Serve ``args`` through the bucket's canonical executable.
+
+        First sight of a bucket compiles ONE CompiledFunction at the bucket
+        boundary; every other length in the bucket (including this call, if
+        non-canonical) is padded up to the boundary and sliced back — zero
+        traces, zero searches, zero new XLA executables.  The function must
+        be length-masked (see ``ChunkConfig.canonical_bucket_exec``).
+        """
+        ckey, spec_args, needs_pad = self._canonical_specs(args)
+        compiled = self._bucket_execs.get(ckey)
+        if compiled is None:
+            stats.bump("bucket_exec_misses")
+            stats.bump("bucket_exec_compiles")
+            self.counters["compiles"] += 1
+            self.counters["bucket_exec_compiles"] += 1
+            compiled = self.compile(*spec_args)
+            self._bucket_execs[ckey] = compiled
+        else:
+            stats.bump("bucket_exec_hits")
+            self.counters["bucket_exec_hits"] += 1
+        if not needs_pad:
+            self._compiled[key] = compiled  # the canonical shape itself
+            return compiled(*args)
+        # true output shapes via abstract eval only (no tracing pass of the
+        # chunk pipeline, no XLA) — exact dim provenance for the un-padding
+        out_specs = jax.eval_shape(self.fn, *args)
+        padded_fn = emit_padded_call(compiled, spec_args, out_specs)
+        self._padded[key] = padded_fn
+        return padded_fn(*args)
 
     # -- introspection ------------------------------------------------------
     @property
@@ -743,6 +847,8 @@ class ChunkedFunction:
         out = dict(self.counters)
         out["compiled_shapes"] = len(self._compiled)
         out["bucket_plans"] = len(self._bucket_plans)
+        out["bucket_execs"] = len(self._bucket_execs)
+        out["padded_shapes"] = len(self._padded)
         if self.cache is not None:
             out["plan_cache"] = self.cache.stats()
         return out

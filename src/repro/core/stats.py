@@ -40,6 +40,18 @@ _COUNTERS: Dict[str, int] = {
     "plan_bucket_hits": 0,
     "plan_bucket_misses": 0,
     "plan_bucket_rejects": 0,
+    # canonical-shape bucket executables (ChunkConfig.canonical_bucket_exec):
+    # one CompiledFunction per bucket, compiled at the bucket boundary.
+    # ``bucket_exec_hits`` counts calls served by an already-built bucket
+    # executable (zero traces, zero XLA compiles — the padded-call path),
+    # ``bucket_exec_compiles`` the one boundary compile each bucket pays.
+    "bucket_exec_hits": 0,
+    "bucket_exec_misses": 0,
+    "bucket_exec_compiles": 0,
+    "padded_calls": 0,
+    # telemetry-driven PlanCache.evict(): plan records removed (a record =
+    # one plan plus all of its bucket aliases)
+    "plan_evictions": 0,
 }
 
 

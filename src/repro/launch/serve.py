@@ -9,6 +9,17 @@ and stores the chunk plan, every later run — or any other process sharing
 the directory — starts warm, replaying the plan with zero search passes.
 The cache status line (``plan cache: warm|cold``) is asserted by CI's
 serving smoke step.
+
+``--second-max-len N`` serves the request batch a second time after
+reconfiguring the engine to ``N``.  When N lands in the same shape bucket
+as ``--max-len``, the second run reuses the bucket's canonical executable:
+the ``[serve] second run`` status line reports ``bucket_exec_hits=1
+new_traces=0 new_wave_compiles=0``, which CI greps to prove the
+padded-executable reuse path.
+
+``--cache-max-entries`` / ``--cache-policy {lru,cost_lfu}`` bound the plan
+cache with telemetry-driven eviction (triggered at the engine's idle
+points; see ``PlanCache.evict``).
 """
 from __future__ import annotations
 
@@ -20,6 +31,7 @@ import numpy as np
 
 from ..configs import get_config
 from ..core import stats
+from ..core.plan import PlanCache
 from ..models import model as M
 from ..serving import Request, ServeEngine
 
@@ -39,6 +51,19 @@ def main(argv=None):
     ap.add_argument("--bucket-lens", type=str, default=None,
                     help="comma-separated seq-len bucket boundaries for plan"
                          " reuse across max-len reconfigurations")
+    ap.add_argument("--second-max-len", type=int, default=None,
+                    help="serve the batch again after reconfiguring to this"
+                         " max-len; inside the same bucket this reuses the"
+                         " canonical executable (0 traces, 0 compiles)")
+    ap.add_argument("--no-canonical-exec", action="store_true",
+                    help="compile per exact max-len instead of at the bucket"
+                         " boundary")
+    ap.add_argument("--cache-policy", choices=list(PlanCache.POLICIES),
+                    default="lru",
+                    help="plan-cache eviction policy (see PlanCache.evict)")
+    ap.add_argument("--cache-max-entries", type=int, default=None,
+                    help="evict plans beyond this count at engine idle"
+                         " points (one record per plan, aliases included)")
     ap.add_argument("--sample", action="store_true",
                     help="sample from the logits instead of greedy argmax")
     ap.add_argument("--seed", type=int, default=0)
@@ -61,6 +86,9 @@ def main(argv=None):
         autochunk_budget=args.autochunk,
         plan_cache=args.plan_cache,
         bucket_lens=bucket_lens,
+        canonical_bucket_exec=not args.no_canonical_exec,
+        cache_policy=args.cache_policy,
+        cache_max_entries=args.cache_max_entries,
         greedy=not args.sample,
         seed=args.seed,
     )
@@ -70,21 +98,50 @@ def main(argv=None):
         state = "warm" if res.from_cache else "cold"
         print(f"[serve] engine built in {t_build:.2f}s;"
               f" plan cache: {state}"
-              f" (stages={len(res.plan)},"
+              f" (stages={len(res.plan)}, exec_len={engine.exec_len},"
               f" peak {res.baseline_peak/2**20:.1f} ->"
               f" {res.final_peak/2**20:.1f} MiB)")
 
-    t0 = time.time()
-    for i in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab_size, args.prompt_len).tolist()
-        engine.submit(Request(rid=i, prompt=prompt, max_new_tokens=args.max_new))
-    done = engine.run()
-    dt = time.time() - t0
-    toks = sum(len(r.generated) for r in done)
-    print(f"[serve] {len(done)} requests, {toks} tokens in {dt:.2f}s"
-          f" ({toks/dt:.1f} tok/s, {engine.n_decode_steps} decode waves)")
+    def serve_batch(tag: str):
+        t0 = time.time()
+        n0 = len(engine.finished)
+        for i in range(args.requests):
+            prompt = rng.integers(0, cfg.vocab_size, args.prompt_len).tolist()
+            engine.submit(
+                Request(rid=i, prompt=prompt, max_new_tokens=args.max_new)
+            )
+        done = engine.run()[n0:]
+        dt = time.time() - t0
+        toks = sum(len(r.generated) for r in done)
+        print(f"[serve]{tag} {len(done)} requests, {toks} tokens in {dt:.2f}s"
+              f" ({toks/dt:.1f} tok/s, {engine.n_decode_steps} decode waves)")
+        return done
+
+    done = serve_batch("")
+
+    if args.second_max_len is not None:
+        before = stats.snapshot()
+        waves_before = dict(engine.exec_stats)
+        engine.reconfigure(max_len=args.second_max_len)
+        serve_batch(f" second run @ max_len={args.second_max_len}:")
+        delta = stats.delta(before)
+        new_waves = (
+            engine.exec_stats["wave_compiles"] - waves_before["wave_compiles"]
+        )
+        print(
+            "[serve] second run:"
+            f" bucket_exec_hits={delta['bucket_exec_hits']}"
+            f" new_traces={delta['trace_calls']}"
+            f" new_searches={delta['search_passes']}"
+            f" new_wave_compiles={new_waves}"
+        )
+
     if engine.plan_cache is not None:
         print(f"[serve] plan cache stats: {engine.plan_cache.stats()}")
+        if args.cache_max_entries is not None:
+            print(f"[serve] cache eviction: policy={args.cache_policy}"
+                  f" max_entries={args.cache_max_entries}"
+                  f" evicted={engine.exec_stats['evicted']}")
     snap = stats.snapshot()
     print(
         "[serve] codegen stats:"

@@ -16,10 +16,23 @@ engine warms a :class:`~repro.core.plan.PlanCache` at construction (pass
 pre-built by ``python -m repro.tools.precompile``).  ``reconfigure()``
 rebuilds the slot layout for a new (max_batch, max_len) and reuses any
 previously compiled plan for that shape — a warm reconfiguration skips the
-search/selection passes entirely.  The decode wave compiles through the
-staged AOT API (one ``ChunkedFunction`` for the engine's lifetime), so a
-reconfiguration to a max_len in an already-seen *bucket* (``bucket_lens``,
-default power-of-two) also replays, with rescaled chunk extents.
+search/selection passes entirely.
+
+Canonical-shape bucket executables (``canonical_bucket_exec``, default on):
+the engine allocates its slot caches — and compiles its decode wave — at the
+*bucket boundary* of ``max_len`` (``exec_len``), not at ``max_len`` itself.
+Decode masking is position-driven, so the extra padded cache tail is
+semantically inert.  One executable therefore serves every ``max_len``
+inside a bucket: reconfiguring within a warm bucket performs zero traces and
+zero XLA compiles (the jitted wave and its ``CompiledFunction`` are reused
+object-identically; counter-asserted via ``bucket_exec_hits``).
+
+Eviction: the engine writes serving telemetry (per-bucket hit counts,
+last-use timestamps, compile cost) into the plan-cache entry metadata and —
+when ``cache_max_entries`` is set — triggers
+:meth:`~repro.core.plan.PlanCache.evict` with ``cache_policy`` at the only
+background-safe points (construction / ``reconfigure``, when no requests are
+in flight).
 """
 from __future__ import annotations
 
@@ -70,6 +83,9 @@ class ServeEngine:
         autochunk_budget: Optional[float] = None,
         plan_cache=None,
         bucket_lens: Optional[Any] = None,
+        canonical_bucket_exec: bool = True,
+        cache_policy: str = "lru",
+        cache_max_entries: Optional[int] = None,
         greedy: bool = True,
         seed: int = 0,
     ):
@@ -90,14 +106,33 @@ class ServeEngine:
         self.plan_cache = as_plan_cache(plan_cache)
         if self.plan_cache is None and autochunk_budget is not None:
             self.plan_cache = PlanCache()
+        if cache_policy not in PlanCache.POLICIES:
+            raise ValueError(
+                f"cache_policy must be one of {PlanCache.POLICIES},"
+                f" got {cache_policy!r}"
+            )
+        self.cache_policy = cache_policy
+        self.cache_max_entries = cache_max_entries
         # bucketed plan reuse: reconfigure() to a max_len in an already-seen
         # bucket replays that bucket's plan (zero search passes) instead of
         # searching the new length from scratch
         self.bucketer = ShapeBucketer(
             buckets=tuple(bucket_lens) if bucket_lens else None
         )
+        # canonical-shape bucket executables: slots and the decode wave are
+        # built at the bucket boundary of max_len, so the whole bucket is
+        # served by ONE executable (max_len stays the logical request cap)
+        self.canonical_bucket_exec = canonical_bucket_exec
         self.autochunk_result = None
         self._chunked_fn = None
+        # (max_batch, exec_len) -> (decode_wave, prefill, autochunk_result):
+        # a reconfigure inside a warm bucket restores these object-identically
+        self._wave_cache: Dict[tuple, tuple] = {}
+        self.exec_stats = {
+            "wave_compiles": 0,
+            "wave_reuses": 0,
+            "evicted": 0,
+        }
 
         self.waiting: List[Request] = []
         self.finished: List[Request] = []
@@ -105,11 +140,20 @@ class ServeEngine:
         self._init_slots()
         self._compile()
 
+    @property
+    def exec_len(self) -> int:
+        """Cache/executable length: the bucket boundary of ``max_len``."""
+        if not self.canonical_bucket_exec:
+            return self.max_len
+        return max(self.max_len, self.bucketer.canonical_dim(self.max_len))
+
     # ------------------------------------------------------------------
     def _init_slots(self):
         # each slot keeps its own B=1 cache; slots are stacked on a fresh
-        # leading axis that the decode wave vmaps over
-        cache1 = M.init_cache(self.cfg, 1, self.max_len)
+        # leading axis that the decode wave vmaps over.  Length is exec_len
+        # (the bucket boundary): decode masking is position-driven, so the
+        # padded tail beyond max_len is never attended to.
+        cache1 = M.init_cache(self.cfg, 1, self.exec_len)
         self.cache = jax.tree.map(
             lambda x: jnp.broadcast_to(
                 x[None], (self.max_batch,) + x.shape
@@ -120,7 +164,34 @@ class ServeEngine:
         self.slot_pos = [0] * self.max_batch
 
     def _compile(self):
-        cfg, max_batch, max_len = self.cfg, self.max_batch, self.max_len
+        from ..core import stats
+
+        cfg, max_batch = self.cfg, self.max_batch
+        # evictions can fire inside ChunkedFunction.compile (the config
+        # knobs) or from our own idle-point trigger — attribute both
+        ev0 = self.plan_cache.evictions if self.plan_cache is not None else 0
+        wave_key = (max_batch, self.exec_len)
+        cached = self._wave_cache.get(wave_key)
+        if cached is not None:
+            # warm bucket: restore the jitted wave + CompiledFunction
+            # object-identically — zero traces, zero searches, zero XLA
+            # compiles (the proof the serving smoke greps for)
+            self._decode_wave, self._prefill, self.autochunk_result = cached
+            self.exec_stats["wave_reuses"] += 1
+            if self.canonical_bucket_exec:
+                # only a canonical engine's reuse is a *bucket* hit; with
+                # exact-length compilation this is plain same-shape reuse
+                stats.bump("bucket_exec_hits")
+            self._record_telemetry(hit=True)
+            self._maybe_evict(ev0)
+            return
+
+        if self.canonical_bucket_exec:
+            # cold bucket: this compile is the bucket's one boundary build
+            # (counted for autochunk'd and plain waves alike, so the
+            # hit/miss/compile ratios stay meaningful per engine class)
+            stats.bump("bucket_exec_misses")
+            stats.bump("bucket_exec_compiles")
 
         def _row_decode(cache_row, tok, pos):
             logits, nc = M.decode_step(
@@ -138,7 +209,11 @@ class ServeEngine:
                 self._chunked_fn = ChunkedFunction(
                     decode_wave,
                     ChunkConfig.from_scalar(
-                        self.autochunk_budget, weight_argnums=()
+                        self.autochunk_budget,
+                        weight_argnums=(),
+                        canonical_bucket_exec=self.canonical_bucket_exec,
+                        cache_policy=self.cache_policy,
+                        cache_max_entries=self.cache_max_entries,
                     ),
                     cache=self.plan_cache,
                     bucketer=self.bucketer,
@@ -149,13 +224,53 @@ class ServeEngine:
                 lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.cache
             )
             # staged AOT: trace -> search (plan, cache/bucket-aware) -> compile
+            # — the specs are already canonical (exec_len-shaped slots), so
+            # this IS the bucket-boundary compile
             compiled = self._chunked_fn.compile(cache_spec, tok_spec, pos_spec)
             self.autochunk_result = compiled.result
             decode_wave = compiled.fn
         self._decode_wave = jax.jit(decode_wave)
         self._prefill = jax.jit(
-            lambda batch: M.prefill(self.cfg, self.params, batch, self.max_len)
+            lambda batch: M.prefill(self.cfg, self.params, batch, self.exec_len)
         )
+        self.exec_stats["wave_compiles"] += 1
+        self._wave_cache[wave_key] = (
+            self._decode_wave, self._prefill, self.autochunk_result
+        )
+        self._record_telemetry(hit=False)
+        self._maybe_evict(ev0)
+
+    # ------------------------------------------------------------------
+    def _record_telemetry(self, *, hit: bool) -> None:
+        """Write serving telemetry into the plan-cache entry metadata."""
+        res = self.autochunk_result
+        if self.plan_cache is None or res is None or not res.cache_key:
+            return
+        self.plan_cache.record_use(
+            res.cache_key,
+            hit=hit,
+            compile_s=res.elapsed_s,
+            bucket=self.exec_len,
+        )
+
+    def _maybe_evict(self, evictions_before: int = 0) -> int:
+        """Telemetry-driven cache eviction (background-safe trigger).
+
+        Only called from construction / ``reconfigure`` — the engine is
+        idle there, and eviction touches only the plan store, never a live
+        executable.  ``evictions_before`` is the cache's eviction counter
+        at compile start, so evictions the ChunkedFunction's own config
+        knobs performed mid-compile are attributed to this engine too.
+        """
+        if self.plan_cache is None:
+            return 0
+        if self.cache_max_entries is not None:
+            self.plan_cache.evict(
+                policy=self.cache_policy, max_entries=self.cache_max_entries
+            )
+        n = self.plan_cache.evictions - evictions_before
+        self.exec_stats["evicted"] += n
+        return n
 
     def reconfigure(
         self,
@@ -165,10 +280,12 @@ class ServeEngine:
     ) -> None:
         """Re-shape the slot layout (and recompile the decode wave).
 
-        Only legal while no requests are in flight.  With a warm plan cache
-        the recompile replays the stored chunk plan for the new shape if one
-        exists (e.g. pre-built by ``repro.tools.precompile`` or seen by an
-        earlier configuration of this engine) instead of re-searching.
+        Only legal while no requests are in flight.  A reconfiguration to a
+        ``max_len`` inside an already-warm bucket reuses that bucket's
+        canonical executable outright (zero traces, zero XLA compiles);
+        otherwise, with a warm plan cache, the recompile replays the stored
+        chunk plan for the new shape if one exists (e.g. pre-built by
+        ``repro.tools.precompile``) instead of re-searching.
         """
         if any(r is not None for r in self.slot_req) or self.waiting:
             raise RuntimeError("reconfigure() requires an idle engine")
@@ -272,6 +389,12 @@ class ServeEngine:
             "mean_ttft_s": sum(ttfts) / len(ttfts) if ttfts else 0.0,
             "mean_latency_s": sum(lats) / len(lats) if lats else 0.0,
         }
+        out["exec_len"] = self.exec_len
+        out["bucket_exec"] = dict(self.exec_stats)
         if self.plan_cache is not None:
             out["plan_cache"] = self.plan_cache.stats()
+            if self.autochunk_result is not None and self.autochunk_result.cache_key:
+                out["plan_telemetry"] = self.plan_cache.entry_meta(
+                    self.autochunk_result.cache_key
+                )
         return out

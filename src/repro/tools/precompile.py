@@ -11,6 +11,14 @@ Everything is traced through ShapeDtypeStructs — no parameters or
 activations are materialized, so full-size configs are safe to precompile
 on a small host.
 
+Sequence lengths are mapped onto their shape-bucket *boundaries* before
+compiling (the canonical shapes that serving engines with
+``canonical_bucket_exec`` actually execute at), so a request for
+``--seq-lens 100,120,500`` builds exactly the two plans the buckets need
+(128 and 512) instead of three near-duplicates.  ``--exact-lens`` restores
+per-length plans; ``--bucket-lens`` supplies explicit boundaries matching
+the serving fleet's ``--bucket-lens``.
+
     python -m repro.tools.precompile --configs gpt-paper,hubert-xlarge \
         --seq-lens 128,512 --budgets 0.4 --cache-dir plans/
 """
@@ -25,7 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import REGISTRY, get_config
-from ..core import ChunkConfig, ChunkedFunction
+from ..core import ChunkConfig, ChunkedFunction, ShapeBucketer
 from ..core.plan import PlanCache
 from ..models import model as M
 
@@ -104,6 +112,16 @@ def main(argv=None) -> int:
     ap.add_argument("--batch", type=int, default=1)
     ap.add_argument("--cache-dir", required=True)
     ap.add_argument(
+        "--bucket-lens", default=None,
+        help="comma-separated explicit bucket boundaries (match the serving"
+             " fleet's --bucket-lens); default power-of-two buckets",
+    )
+    ap.add_argument(
+        "--exact-lens", action="store_true",
+        help="precompile at the requested lengths instead of collapsing"
+             " them to bucket boundaries",
+    )
+    ap.add_argument(
         "--full",
         action="store_true",
         help="precompile the full-size config instead of the reduced variant",
@@ -118,6 +136,21 @@ def main(argv=None) -> int:
     )
     seqs = [int(s) for s in args.seq_lens.split(",") if s]
     budgets = [float(b) for b in args.budgets.split(",") if b]
+
+    if not args.exact_lens:
+        # compile at bucket boundaries only: one plan per bucket is all a
+        # canonical-bucket serving engine will ever look up
+        bucketer = ShapeBucketer(
+            buckets=tuple(int(s) for s in args.bucket_lens.split(",") if s)
+            if args.bucket_lens else None
+        )
+        canonical = list(dict.fromkeys(bucketer.canonical_dim(s) for s in seqs))
+        if canonical != seqs:
+            print(
+                f"# canonical bucket boundaries: {seqs} -> {canonical}",
+                file=sys.stderr,
+            )
+        seqs = canonical
 
     cache = PlanCache(args.cache_dir)
     failures = 0

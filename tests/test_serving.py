@@ -137,13 +137,17 @@ def test_engine_plan_cache_and_reconfigure(setup, tmp_path):
     e1.run()
     e2.run()
 
-    # reconfigure to a new shape (cold), then back (warm, no search)
+    # reconfigure to a new shape (cold: 96 -> bucket boundary 128), then
+    # back (warm: the bucket's canonical executable is reused outright —
+    # zero traces, zero searches, zero new executables)
     e2.reconfigure(max_len=96)
+    assert e2.exec_len == 128
     assert len(e2.plan_cache) == 2
     before = stats.snapshot()
     e2.reconfigure(max_len=64)
     delta = stats.delta(before)
-    assert delta["search_calls"] == 0 and delta["plan_cache_hits"] == 1
+    assert delta["search_calls"] == 0 and delta["trace_calls"] == 0
+    assert delta["bucket_exec_hits"] == 1 and delta["bucket_exec_compiles"] == 0
     e2.submit(Request(rid=1, prompt=[1, 2, 3], max_new_tokens=2))
     done = e2.run()
     assert done[-1].done
@@ -153,6 +157,66 @@ def test_engine_plan_cache_and_reconfigure(setup, tmp_path):
     with pytest.raises(RuntimeError):
         e2.reconfigure(max_len=96)
     e2.run()
+
+
+def test_engine_canonical_bucket_exec(setup):
+    """One executable serves the whole bucket: an engine at max_len=60
+    executes at the 64 boundary with identical tokens, and reconfiguring to
+    another length inside the bucket performs zero traces and zero new
+    executables (ISSUE-5 acceptance counter)."""
+    from repro.core import stats
+
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=60,
+                      autochunk_budget=0.5)
+    assert eng.exec_len == 64
+    r = Request(rid=0, prompt=[3, 1, 4, 1, 5], max_new_tokens=6)
+    eng.submit(r)
+    eng.run()
+
+    ref = ServeEngine(cfg, params, max_batch=2, max_len=64)
+    r_ref = Request(rid=0, prompt=[3, 1, 4, 1, 5], max_new_tokens=6)
+    ref.submit(r_ref)
+    ref.run()
+    assert r.generated == r_ref.generated  # padded cache tail is inert
+
+    before = stats.snapshot()
+    eng.reconfigure(max_len=50)  # same bucket: reuse, don't recompile
+    delta = stats.delta(before)
+    assert delta["trace_calls"] == 0 and delta["search_passes"] == 0
+    assert delta["bucket_exec_hits"] == 1
+    assert delta["bucket_exec_compiles"] == 0
+    assert eng.exec_stats["wave_reuses"] == 1
+
+    r2 = Request(rid=1, prompt=[3, 1, 4, 1, 5], max_new_tokens=6)
+    eng.submit(r2)
+    eng.run()
+    assert r2.generated == r_ref.generated  # same executable, same tokens
+
+    m = eng.metrics()
+    assert m["exec_len"] == 64
+    assert m["bucket_exec"]["wave_compiles"] == 1
+    assert m["plan_telemetry"]["hits"] >= 1
+    assert "64" in m["plan_telemetry"]["buckets"]
+
+
+def test_engine_telemetry_driven_eviction(setup, tmp_path):
+    """cache_max_entries triggers PlanCache.evict at engine idle points;
+    the LRU plan (the bucket not in use) is the one that goes."""
+    cfg, params = setup
+    eng = ServeEngine(
+        cfg, params, max_batch=2, max_len=64, autochunk_budget=0.5,
+        plan_cache=tmp_path / "plans", cache_max_entries=1,
+    )
+    assert len(eng.plan_cache) == 1 and eng.exec_stats["evicted"] == 0
+    eng.reconfigure(max_len=200)  # new bucket (256): second plan, then evict
+    assert eng.exec_len == 256
+    assert len(eng.plan_cache) == 1  # the 64-bucket plan was evicted
+    assert eng.exec_stats["evicted"] == 1
+    assert eng.plan_cache.stats()["evictions"] == 1
+    # the surviving plan is the one the engine is currently serving with
+    key = eng.autochunk_result.cache_key
+    assert eng.plan_cache.get(key) is not None
 
 
 def test_admit_samples_first_token_when_not_greedy(setup):

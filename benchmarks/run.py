@@ -24,6 +24,7 @@ from . import (
     codegen_bench,
     max_seq,
     roofline,
+    serving_bench,
     throughput_vs_budget,
     vs_expert_chunk,
     vs_fused_kernel,
@@ -38,9 +39,11 @@ SUITES = {
     "archcov": arch_coverage.run,
     "roofline": roofline.run,
     "codegen": codegen_bench.run,
+    "serving": serving_bench.run,
 }
 
 BASELINE_BENCH = str(Path(__file__).resolve().parent / "BENCH_codegen.json")
+BASELINE_SERVING = str(Path(__file__).resolve().parent / "BENCH_serving.json")
 
 
 def smoke(rows) -> None:
@@ -81,29 +84,49 @@ def main() -> None:
     ap.add_argument("--bench-check", action="store_true",
                     help="assert trace_calls/search_passes of the lowering"
                          " backend do not regress vs the committed"
-                         " benchmarks/BENCH_codegen.json (CI gate; implies"
-                         " the codegen benchmark)")
+                         " benchmarks/BENCH_codegen.json, and the paged"
+                         " serving counters vs BENCH_serving.json (CI gate;"
+                         " implies both benchmarks)")
+    ap.add_argument("--serving-bench-out", type=str, default=None,
+                    help="write the paged-vs-fixed-slot serving benchmark"
+                         " JSON (TTFT, decode tok/s, peak pages, padded-KV"
+                         " bytes saved) to this path")
     args = ap.parse_args()
     from . import common
 
     if args.plan_cache:
         common.set_plan_cache(args.plan_cache)
-    if args.bench_out or args.bench_check:
+    if args.bench_out or args.bench_check or args.serving_bench_out:
         import json
 
-        fresh = codegen_bench.run_codegen_bench()
-        print(json.dumps(fresh, indent=2))
-        if args.bench_out:
-            Path(args.bench_out).write_text(json.dumps(fresh, indent=2) + "\n")
+        problems = []
+        if args.bench_out or args.bench_check:
+            fresh = codegen_bench.run_codegen_bench()
+            print(json.dumps(fresh, indent=2))
+            if args.bench_out:
+                Path(args.bench_out).write_text(
+                    json.dumps(fresh, indent=2) + "\n"
+                )
+            if args.bench_check:
+                baseline = json.loads(Path(BASELINE_BENCH).read_text())
+                problems += codegen_bench.check_against(baseline, fresh)
+        if args.serving_bench_out or args.bench_check:
+            fresh_srv = serving_bench.run_serving_bench()
+            print(json.dumps(fresh_srv, indent=2))
+            if args.serving_bench_out:
+                Path(args.serving_bench_out).write_text(
+                    json.dumps(fresh_srv, indent=2) + "\n"
+                )
+            if args.bench_check:
+                srv_base = json.loads(Path(BASELINE_SERVING).read_text())
+                problems += serving_bench.check_against(srv_base, fresh_srv)
         if args.bench_check:
-            baseline = json.loads(Path(BASELINE_BENCH).read_text())
-            problems = codegen_bench.check_against(baseline, fresh)
             for p in problems:
                 print(f"# BENCH REGRESSION: {p}", file=sys.stderr)
             if problems:
                 sys.exit(1)
-            print("# bench check ok: retrace/search counts within baseline",
-                  file=sys.stderr)
+            print("# bench check ok: codegen counts and paged serving"
+                  " counters within baseline", file=sys.stderr)
         return
     if args.smoke:
         names = ["smoke"]

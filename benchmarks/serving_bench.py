@@ -1,0 +1,201 @@
+"""Serving benchmark: paged continuous batching vs the fixed-slot engine.
+
+Runs the same staggered-length request set through both serving paths on
+the reduced quickstart GPT:
+
+* **fixed-slot** (:class:`ServeEngine`): every admitted request owns a
+  dense ``exec_len``-long KV slot, padded no matter the actual context;
+* **paged** (:class:`PagedServeEngine`): continuous batching on the paged
+  KV pool, prefill chunked by the AutoChunk activation-budget planner.
+
+Reported per engine: mean TTFT, decode tokens/s, and KV footprint.  The
+headline figure is ``padded_kv_bytes_saved`` — fixed-slot KV bytes
+(``max_batch * exec_len * token_bytes``) minus the paged pool's peak
+(``peak_pages_in_use * page_size * token_bytes``).
+
+``benchmarks.run --bench-check`` re-measures and gates on the paged
+engine's *counter invariants* (mixed steps happened, every page freed,
+zero padded waste, bytes saved did not regress) — wall-clock numbers are
+informational only, CI machines are too noisy to gate on them.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import stats
+from repro.models import model as M
+from repro.serving import PagedServeEngine, Request, ServeEngine
+
+ARCH = "gpt-paper"
+REQUESTS = 6
+PROMPT_LEN = 8
+MAX_NEW = 4
+MAX_LEN = 64
+PAGE_SIZE = 8
+MAX_SEQS = 3       # paged step-batch rows
+MAX_BATCH = 3      # fixed-slot decode slots (kept equal for a fair compare)
+BUDGET = 0.5
+SEED = 0
+
+
+def _staggered_lens(n: int, base: int, cap: int) -> List[int]:
+    """Same stagger as ``launch.serve --stagger``: 3-phase length cycle."""
+    return [max(1, min(cap, base * (1 + 3 * (i % 3)) // 2)) for i in range(n)]
+
+
+def _drive(engine, prompts: List[List[int]]) -> Dict:
+    t0 = time.time()
+    for i, p in enumerate(prompts):
+        engine.submit(Request(rid=i, prompt=p, max_new_tokens=MAX_NEW))
+    done = engine.run()
+    wall = time.time() - t0
+    toks = sum(len(r.generated) for r in done)
+    m = engine.metrics()
+    return {
+        "requests": len(done),
+        "tokens": toks,
+        "wall_s": round(wall, 4),
+        "decode_tok_s": round(toks / wall, 2) if wall > 0 else 0.0,
+        "mean_ttft_s": round(m["mean_ttft_s"], 4),
+        "metrics": m,
+    }
+
+
+def run_serving_bench() -> Dict:
+    cfg = get_config(ARCH).reduced().with_(dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(SEED))
+    lens = _staggered_lens(REQUESTS, PROMPT_LEN, MAX_LEN - MAX_NEW)
+    rng = np.random.default_rng(SEED)
+    prompts = [rng.integers(0, cfg.vocab_size, n).tolist() for n in lens]
+
+    # --- paged continuous batching -----------------------------------
+    before = stats.snapshot()
+    t0 = time.time()
+    paged_engine = PagedServeEngine(
+        cfg, params,
+        max_seqs=MAX_SEQS, max_len=MAX_LEN, page_size=PAGE_SIZE,
+        autochunk_budget=BUDGET, greedy=True, seed=SEED,
+    )
+    paged_build_s = time.time() - t0
+    paged = _drive(paged_engine, prompts)
+    delta = stats.delta(before)
+    pool = paged_engine.pool
+    token_bytes = pool.token_bytes()
+    paged_peak_kv = pool.peak_pages_in_use * pool.page_size * token_bytes
+    paged.update(
+        build_s=round(paged_build_s, 3),
+        prefill_chunk=paged_engine.prefill_chunk,
+        mixed_steps=delta["mixed_steps"],
+        prefill_chunks=delta["prefill_chunks"],
+        pages_allocated=delta["pages_allocated"],
+        pages_freed=delta["pages_freed"],
+        peak_pages_in_use=pool.peak_pages_in_use,
+        step_compiles=paged_engine.sched_stats["step_compiles"],
+        kv_bytes_peak=paged_peak_kv,
+        padded_kv_waste_bytes=paged["metrics"]["kv_pool"][
+            "padded_kv_waste_bytes"
+        ],
+    )
+    del paged["metrics"]
+
+    # --- fixed-slot baseline -----------------------------------------
+    t0 = time.time()
+    fixed_engine = ServeEngine(
+        cfg, params,
+        max_batch=MAX_BATCH, max_len=MAX_LEN, greedy=True, seed=SEED,
+    )
+    fixed_build_s = time.time() - t0
+    fixed = _drive(fixed_engine, prompts)
+    fixed_kv = fixed_engine.max_batch * fixed_engine.exec_len * token_bytes
+    fixed.update(
+        build_s=round(fixed_build_s, 3),
+        exec_len=fixed_engine.exec_len,
+        kv_bytes=fixed_kv,
+    )
+    del fixed["metrics"]
+
+    return {
+        "config": {
+            "arch": ARCH, "requests": REQUESTS, "prompt_lens": lens,
+            "max_new": MAX_NEW, "max_len": MAX_LEN,
+            "page_size": PAGE_SIZE, "max_seqs": MAX_SEQS,
+            "budget": BUDGET, "token_bytes": token_bytes,
+        },
+        "paged": paged,
+        "fixed_slot": fixed,
+        "padded_kv_bytes_saved": fixed_kv - paged_peak_kv,
+    }
+
+
+def check_against(baseline: Dict, fresh: Dict) -> list:
+    """CI gates: the paged engine's counter invariants, not wall time.
+
+    * mixed prefill+decode steps actually happened;
+    * every allocated page was freed (no leaks across the run);
+    * padded KV waste is identically zero;
+    * bytes saved vs fixed-slot did not shrink below the committed
+      baseline;
+    * the jitted step-shape count did not grow (bounded recompiles).
+    """
+    problems = []
+    p = fresh["paged"]
+    if p["mixed_steps"] < 1:
+        problems.append(f"paged.mixed_steps={p['mixed_steps']}, expected >0")
+    if p["pages_freed"] != p["pages_allocated"]:
+        problems.append(
+            f"page leak: allocated {p['pages_allocated']},"
+            f" freed {p['pages_freed']}"
+        )
+    if p["padded_kv_waste_bytes"] != 0:
+        problems.append(
+            f"padded_kv_waste_bytes={p['padded_kv_waste_bytes']}, expected 0"
+        )
+    base_saved = baseline.get("padded_kv_bytes_saved")
+    cur_saved = fresh.get("padded_kv_bytes_saved")
+    if base_saved is not None and cur_saved is not None:
+        if cur_saved < base_saved:
+            problems.append(
+                f"padded_kv_bytes_saved regressed: {cur_saved}"
+                f" < baseline {base_saved}"
+            )
+    base_compiles = baseline["paged"].get("step_compiles")
+    if base_compiles is not None and p["step_compiles"] > base_compiles:
+        problems.append(
+            f"paged.step_compiles grew: {p['step_compiles']}"
+            f" > baseline {base_compiles}"
+        )
+    return problems
+
+
+def run(rows) -> None:
+    """Benchmark-suite entry point (``--only serving``)."""
+    out = run_serving_bench()
+    rows.append(
+        (
+            "serving_paged",
+            out["paged"]["wall_s"] * 1e6,
+            f"tok_s={out['paged']['decode_tok_s']}"
+            f" mixed={out['paged']['mixed_steps']}"
+            f" peak_pages={out['paged']['peak_pages_in_use']}",
+        )
+    )
+    rows.append(
+        (
+            "serving_fixed_slot",
+            out["fixed_slot"]["wall_s"] * 1e6,
+            f"tok_s={out['fixed_slot']['decode_tok_s']}"
+            f" exec_len={out['fixed_slot']['exec_len']}",
+        )
+    )
+    rows.append(
+        (
+            "serving_kv_saved",
+            0.0,
+            f"bytes={out['padded_kv_bytes_saved']}",
+        )
+    )

@@ -6,7 +6,12 @@ from .config import ChunkConfig, ShapeBucketer
 from .kernel_dispatch import dispatch_graph
 from .lowering import ChunkLoopEqn, apply_chunk, emit, emit_padded_call
 from .staged import ChunkedFunction, CompiledFunction, Lowered, Planned, Traced
-from .estimation import MemoryProfile, estimate_memory
+from .estimation import (
+    MemoryProfile,
+    PrefillChunkPlan,
+    estimate_memory,
+    plan_prefill_chunk,
+)
 from .graph import Graph, dim_stride, eqn_flops, graph_flops, trace
 from .plan import (
     ChunkPlan,
@@ -40,7 +45,9 @@ __all__ = [
     "dispatch_graph",
     "Lowered",
     "MemoryProfile",
+    "PrefillChunkPlan",
     "estimate_memory",
+    "plan_prefill_chunk",
     "Graph",
     "trace",
     "eqn_flops",

@@ -148,3 +148,108 @@ def estimate_memory(g: Graph) -> MemoryProfile:
         io_bytes=io_b,
         weight_bytes=weight_b,
     )
+
+
+# ===========================================================================
+# Prefill-chunk planning (paged continuous batching)
+# ===========================================================================
+
+@dataclass
+class PrefillChunkPlan:
+    """Planner output for the paged engine's chunked prefill.
+
+    ``chunk`` is the largest candidate whose estimated one-layer activation
+    peak fits the budget; ``candidate_peaks`` records the whole sweep so
+    serving telemetry can show *why* the knob landed where it did.
+    """
+
+    chunk: int
+    peak_bytes: int                   # estimated peak at the chosen chunk
+    budget_bytes: int                 # resolved absolute budget
+    baseline_peak_bytes: int          # peak of the unchunked (full) prefill
+    candidate_peaks: Dict[int, int]
+    fits: bool                        # False => even the smallest candidate
+                                      # exceeds the budget (best effort)
+
+
+def _prefill_step_graph(cfg, chunk: int, kv_len: int):
+    """Trace one attention block applied to a ``chunk``-token prefill slice
+    attending to a ``kv_len`` context (the paged engine's per-layer step)."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..models import layers as L
+    from ..models import model as M
+    from .graph import trace
+
+    p_spec = jax.eval_shape(
+        lambda: M.dense_block_params(cfg, jax.random.PRNGKey(0))
+    )
+    dt = cfg.jdtype
+    x = jax.ShapeDtypeStruct((1, chunk, cfg.d_model), dt)
+    k = jax.ShapeDtypeStruct((1, kv_len, cfg.n_kv_heads, cfg.hd), dt)
+    v = jax.ShapeDtypeStruct((1, kv_len, cfg.n_kv_heads, cfg.hd), dt)
+
+    def step(p, x, k, v):
+        qpos = (kv_len - chunk) + jnp.arange(chunk, dtype=jnp.int32)
+        kvpos = jnp.arange(kv_len, dtype=jnp.int32)
+        h = L.apply_norm(cfg, x, p["ln1"])
+        q, _, _ = L.attn_project_qkv(cfg, p["attn"], h, qpos)
+        o = L.gqa_attention(q, k, v, q_pos=qpos, kv_pos=kvpos, causal=True)
+        x = x + o.reshape(1, chunk, -1) @ p["attn"]["wo"]
+        h2 = L.apply_norm(cfg, x, p["ln2"])
+        return x + L.mlp(cfg, p["mlp"], h2)
+
+    g, _ = trace(step, (p_spec, x, k, v), weight_argnums=(0,))
+    return g
+
+
+def plan_prefill_chunk(
+    cfg,
+    *,
+    budget: float,
+    max_len: int,
+    min_chunk: int = 8,
+) -> PrefillChunkPlan:
+    """Pick the prefill chunk size from the activation budget.
+
+    This is the AutoChunk estimator driving the *scheduler*: instead of a
+    fixed ``--prefill-chunk`` knob, each power-of-two candidate chunk is
+    traced as one block step against a ``max_len`` context and run through
+    the liveness-exact :func:`estimate_memory` pass; the planner returns
+    the largest chunk whose estimated peak fits.  ``budget`` follows the
+    paper's scalar convention (:meth:`ChunkConfig.from_scalar`): <= 1.0 is
+    a ratio of the unchunked full-prefill peak, > 1.0 is absolute bytes.
+    The planner and the batcher therefore co-own one memory budget — a
+    tighter budget yields smaller chunks and more (cheaper) mixed steps,
+    never an OOM.
+    """
+    candidates = []
+    c = max(1, min_chunk)
+    while c < max_len:
+        candidates.append(c)
+        c *= 2
+    candidates.append(max_len)
+
+    peaks: Dict[int, int] = {}
+    for c in candidates:
+        g = _prefill_step_graph(cfg, c, max_len)
+        peaks[c] = estimate_memory(g).peak_bytes
+    baseline = peaks[max_len]
+    budget_bytes = int(budget) if budget > 1.0 else int(baseline * budget)
+
+    fitting = [c for c in candidates if peaks[c] <= budget_bytes]
+    if fitting:
+        chunk = max(fitting)
+        fits = True
+    else:
+        chunk = min(candidates)  # best effort: smallest step we can take
+        fits = False
+    return PrefillChunkPlan(
+        chunk=chunk,
+        peak_bytes=peaks[chunk],
+        budget_bytes=budget_bytes,
+        baseline_peak_bytes=baseline,
+        candidate_peaks=peaks,
+        fits=fits,
+    )

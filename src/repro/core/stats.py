@@ -52,6 +52,21 @@ _COUNTERS: Dict[str, int] = {
     # telemetry-driven PlanCache.evict(): plan records removed (a record =
     # one plan plus all of its bucket aliases)
     "plan_evictions": 0,
+    # paged-KV continuous batching (serving.kv_pool / PagedServeEngine):
+    # ``pages_allocated``/``pages_freed`` count physical pages leaving and
+    # re-entering the pool free list (freed pages are reused, so a long-run
+    # engine's allocated count can exceed the pool size many times over);
+    # ``prefill_chunks`` counts planner-sized prompt chunks executed;
+    # ``mixed_steps`` counts engine steps that ran prefill and decode tokens
+    # in the SAME ragged batch — the observable signature of continuous
+    # batching (asserted by CI's paged serving smoke).
+    "pages_allocated": 0,
+    "pages_freed": 0,
+    "prefill_chunks": 0,
+    "mixed_steps": 0,
+    # requests the scheduler declined to admit because the pool could not
+    # reserve enough pages (admission is bounded by pages, not slots)
+    "admission_refusals": 0,
 }
 
 

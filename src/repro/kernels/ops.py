@@ -2,12 +2,17 @@
 
 On this CPU container the kernels run in interpret mode (``interpret=True``
 executes the kernel body in Python for correctness); on TPU the same call
-compiles to Mosaic.  ``INTERPRET`` flips automatically from the backend.
+compiles to Mosaic.  ``INTERPRET`` flips automatically from the backend,
+and the ``AUTOCHUNK_PALLAS_INTERPRET`` env var overrides the detection
+("1" forces interpret mode — the CPU CI matrix sets this so kernel
+equivalence tests run deterministically instead of skipping; "0" forces
+compiled Mosaic, for the ``tpu``-marked true-hardware tests).
 GQA inputs are expanded to full heads before the attention kernel (the
 kernel itself is head-uniform).
 """
 from __future__ import annotations
 
+import os
 from functools import partial
 
 import jax
@@ -16,10 +21,22 @@ import jax.numpy as jnp
 from .chunked_attention import chunked_attention as _attn
 from .chunked_attention import masked_attention as _masked_attn
 from .chunked_ffn import chunked_ffn as _ffn
+from .paged_attention import paged_attention_blocked as _paged_attn
 from .rglru_scan import rglru_scan as _rglru
 from .ssd_scan import ssd_scan as _ssd
 
-INTERPRET = jax.default_backend() != "tpu"
+
+def interpret_default() -> bool:
+    """Resolve interpret mode: env override first, then backend detection."""
+    env = os.environ.get("AUTOCHUNK_PALLAS_INTERPRET", "")
+    if env in ("1", "true"):
+        return True
+    if env in ("0", "false"):
+        return False
+    return jax.default_backend() != "tpu"
+
+
+INTERPRET = interpret_default()
 
 
 def _fit_block(size: int, block: int) -> int:
@@ -82,6 +99,46 @@ def masked_attention(q, k, v, mask, *, scale, block_q=128, block_kv=128):
         q, k, v, mask, scale=scale,
         block_q=bq, block_kv=bkv, interpret=INTERPRET,
     )
+
+
+@partial(jax.jit, static_argnames=("scale", "q_max"))
+def paged_attention(q, kv_pages, page_table, cu_q_lens, cu_kv_lens, *,
+                    scale=None, q_max=None):
+    """Ragged paged flash attention — the paged serving path's core op.
+
+    ``q``: (T, H, hd) — every sequence's new query tokens concatenated
+    (decode rows contribute 1 token, prefill rows a planner-sized chunk);
+    ``kv_pages``: (P, page_size, 2*Kv, hd) pool in the fused
+    head-interleaved [K0,V0,K1,V1,..] layout; ``page_table``:
+    (S, max_pages) int32; ``cu_q_lens``/``cu_kv_lens``: (S+1,) cumulative
+    ragged descriptors (kv lens count context *including* the new q tokens,
+    already written into the pool).  Causal within each sequence.  Returns
+    (T, H, hd).
+
+    ``q_max`` (static) bounds the longest per-sequence q run; it defaults
+    to T (always safe).  The wrapper blocks the ragged batch per sequence,
+    runs the page-table-indexed kernel, and re-flattens.
+    """
+    T, H, hd = q.shape
+    S = cu_q_lens.shape[0] - 1
+    if q_max is None:
+        q_max = T
+    q_lens = jnp.diff(cu_q_lens.astype(jnp.int32))
+    kv_lens = jnp.diff(cu_kv_lens.astype(jnp.int32))
+    # ragged-flat -> per-sequence blocks (q padding only; KV stays paged)
+    idx = cu_q_lens[:-1, None].astype(jnp.int32) + jnp.arange(q_max)[None, :]
+    valid = jnp.arange(q_max)[None, :] < q_lens[:, None]
+    qb = jnp.take(q, jnp.clip(idx, 0, T - 1), axis=0)        # (S, q_max, H, hd)
+    out_b = _paged_attn(
+        qb, kv_pages, page_table, q_lens, kv_lens,
+        scale=scale, interpret=INTERPRET,
+    )
+    # scatter back to the flat layout; padded rows land in a dump slot
+    flat_idx = jnp.where(valid, idx, T).reshape(-1)
+    out = jnp.zeros((T + 1, H, hd), q.dtype).at[flat_idx].set(
+        out_b.reshape(S * q_max, H, hd)
+    )
+    return out[:T]
 
 
 @partial(jax.jit, static_argnames=("chunk",))

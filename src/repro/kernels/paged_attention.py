@@ -1,0 +1,179 @@
+"""Ragged paged flash attention Pallas kernel (TPU target).
+
+The serving rewrite stores KV in a paged pool (``serving.kv_pool``): fixed
+``page_size`` pages with a fused head-interleaved layout ``[K0,V0,K1,V1,..]``
+on the head axis, one page table per sequence.  This kernel attends a ragged
+batch of query rows against that pool *in place* — no gather of pages into a
+dense per-sequence cache ever happens in HBM:
+
+* the **page table is the index map**: the KV BlockSpec resolves grid step
+  ``(s, ki)`` to physical page ``page_table[s, ki]`` through scalar prefetch
+  (``pltpu.PrefetchScalarGridSpec``), so the DMA engine walks each
+  sequence's logical pages directly;
+* the batch is **ragged**: row ``s`` carries ``q_lens[s]`` query tokens
+  (1 for decode rows, a planner-sized chunk for prefill rows — both kinds
+  coexist in one mixed step) against ``kv_lens[s]`` context tokens;
+* attention is **causal within each sequence**: query ``i`` of row ``s``
+  sits at absolute position ``kv_lens[s] - q_lens[s] + i`` and attends to
+  positions ``<=`` its own.
+
+Grid: ``(S, max_pages)`` with the page index innermost, so the online-softmax
+accumulator carries across a sequence's pages in VMEM scratch.  Pages past
+``ceil(kv_len / page_size)`` are skipped (``pl.when``); their page-table
+entries are clamped to a valid physical page so the prefetch never reads out
+of bounds.
+
+The pure-jnp oracle is :func:`repro.kernels.ref.paged_attention_ref`; the
+public ragged wrapper (``cu_q_lens``/``cu_kv_lens`` descriptors) is
+:func:`repro.kernels.ops.paged_attention`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def interleave_kv(k, v):
+    """Fuse K/V into the pool's head-interleaved layout.
+
+    ``k``/``v``: (..., Kv, hd)  ->  (..., 2*Kv, hd) ordered [K0,V0,K1,V1,..].
+    """
+    Kv, hd = k.shape[-2:]
+    stacked = jnp.stack([k, v], axis=-2)          # (..., Kv, 2, hd)
+    return stacked.reshape(*k.shape[:-2], 2 * Kv, hd)
+
+
+def split_kv(pages):
+    """Inverse of :func:`interleave_kv`: (..., 2*Kv, hd) -> k, v."""
+    two_kv, hd = pages.shape[-2:]
+    kv = pages.reshape(*pages.shape[:-2], two_kv // 2, 2, hd)
+    return kv[..., 0, :], kv[..., 1, :]
+
+
+def _paged_attn_kernel(
+    # scalar-prefetch refs
+    pt_ref, ql_ref, kl_ref,
+    # tensor refs
+    q_ref, kv_ref, o_ref,
+    # scratch
+    acc_ref, m_ref, l_ref,
+    *, scale: float, page_size: int, q_max: int, n_q_heads: int, n_kv_heads: int,
+):
+    s = pl.program_id(0)
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_len = ql_ref[s]
+    kv_len = kl_ref[s]
+
+    @pl.when(ki * page_size < kv_len)
+    def _accumulate():
+        G = n_q_heads // n_kv_heads
+        hd = q_ref.shape[-1]
+        q = q_ref[0].astype(jnp.float32)                    # (q_max, H, hd)
+        k, v = split_kv(kv_ref[0].astype(jnp.float32))      # (ps, Kv, hd)
+
+        qg = q.reshape(q_max, n_kv_heads, G, hd)
+        # (q_max, Kv, G, ps) logits for this page
+        logits = jnp.einsum("qkgd,pkd->qkgp", qg, k) * scale
+        logits = logits.reshape(q_max, n_q_heads, page_size)
+
+        kpos = ki * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (q_max, page_size), 1
+        )
+        qpos = (kv_len - q_len) + jax.lax.broadcasted_iota(
+            jnp.int32, (q_max, page_size), 0
+        )
+        mask = (kpos <= qpos) & (kpos < kv_len)
+        logits = jnp.where(mask[:, None, :], logits, NEG_INF)
+
+        m_prev = m_ref[...]                                  # (q_max, H)
+        m_cur = jnp.max(logits, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new[..., None])               # (q_max, H, ps)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1)
+        pg = p.reshape(q_max, n_kv_heads, G, page_size)
+        pv = jnp.einsum("qkgp,pkd->qkgd", pg, v).reshape(q_max, n_q_heads, hd)
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def paged_attention_blocked(
+    q, kv_pages, page_table, q_lens, kv_lens, *,
+    scale: float | None = None,
+    interpret: bool = False,
+):
+    """Ragged paged attention over per-sequence-blocked queries.
+
+    ``q``: (S, q_max, H, hd) — row ``s`` holds ``q_lens[s]`` real tokens
+    (left-aligned; the tail is padding whose output is garbage and must be
+    discarded by the caller).  ``kv_pages``: (P, page_size, 2*Kv, hd) in the
+    interleaved [K0,V0,..] layout.  ``page_table``: (S, max_pages) int32 —
+    logical page ``j`` of row ``s`` lives in physical page
+    ``page_table[s, j]`` (entries past the row's page count may be any valid
+    physical index; they are skipped).  ``kv_lens[s]`` counts the row's
+    total context *including* its own q tokens, which must already be
+    written into the pool.  Returns (S, q_max, H, hd).
+    """
+    S, q_max, H, hd = q.shape
+    P, page_size, two_kv, _ = kv_pages.shape
+    Kv = two_kv // 2
+    assert H % Kv == 0, (H, Kv)
+    if scale is None:
+        scale = 1.0 / (hd ** 0.5)
+    max_pages = page_table.shape[1]
+
+    # inactive page-table entries may be uninitialized: clamp so the
+    # prefetched index map always names a physical page
+    page_table = jnp.clip(page_table.astype(jnp.int32), 0, P - 1)
+    q_lens = q_lens.astype(jnp.int32)
+    kv_lens = kv_lens.astype(jnp.int32)
+
+    kernel = functools.partial(
+        _paged_attn_kernel,
+        scale=float(scale), page_size=page_size, q_max=q_max,
+        n_q_heads=H, n_kv_heads=Kv,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(S, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, q_max, H, hd), lambda s, ki, pt, ql, kl: (s, 0, 0, 0)),
+            pl.BlockSpec(
+                (1, page_size, two_kv, hd),
+                lambda s, ki, pt, ql, kl: (pt[s, ki], 0, 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, q_max, H, hd), lambda s, ki, pt, ql, kl: (s, 0, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((q_max, H, hd), jnp.float32),
+            pltpu.VMEM((q_max, H), jnp.float32),
+            pltpu.VMEM((q_max, H), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, q_max, H, hd), q.dtype),
+        interpret=interpret,
+    )(page_table, q_lens, kv_lens, q, kv_pages)

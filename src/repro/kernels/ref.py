@@ -29,6 +29,47 @@ def attention_ref(q, k, v, *, causal: bool = True, window=None):
     return out.astype(q.dtype)
 
 
+def paged_attention_ref(q, kv_pages, page_table, cu_q_lens, cu_kv_lens):
+    """Host-side oracle for the ragged paged attention kernel.
+
+    ``q``: (T, H, hd) — all sequences' query tokens concatenated;
+    ``kv_pages``: (P, page_size, 2*Kv, hd) head-interleaved [K0,V0,..];
+    ``page_table``: (S, max_pages) int; ``cu_q_lens``/``cu_kv_lens``:
+    (S+1,) *concrete* (host int) cumulative descriptors.  Gathers each
+    sequence's pages into a dense KV, runs f32 softmax attention causal
+    within the sequence (query i at absolute position kv_len - q_len + i),
+    and re-concatenates.  Returns (T, H, hd).
+    """
+    T, H, hd = q.shape
+    page_size = kv_pages.shape[1]
+    Kv = kv_pages.shape[2] // 2
+    scale = 1.0 / math.sqrt(hd)
+    cu_q = [int(x) for x in cu_q_lens]
+    cu_kv = [int(x) for x in cu_kv_lens]
+    S = len(cu_q) - 1
+    outs = []
+    for s in range(S):
+        q_len = cu_q[s + 1] - cu_q[s]
+        kv_len = cu_kv[s + 1] - cu_kv[s]
+        if q_len == 0:
+            continue
+        qs = q[cu_q[s]:cu_q[s + 1]].astype(jnp.float32)      # (L, H, hd)
+        n_pages = -(-kv_len // page_size)
+        pages = kv_pages[jnp.asarray(page_table)[s, :n_pages]]
+        kv = pages.reshape(n_pages * page_size, 2 * Kv, hd)[:kv_len]
+        kv = kv.reshape(kv_len, Kv, 2, hd).astype(jnp.float32)
+        k, v = kv[:, :, 0], kv[:, :, 1]                      # (kv_len, Kv, hd)
+        k = jnp.repeat(k, H // Kv, axis=1)
+        v = jnp.repeat(v, H // Kv, axis=1)
+        logits = jnp.einsum("qhd,shd->hqs", qs, k) * scale
+        qpos = (kv_len - q_len) + jnp.arange(q_len)[:, None]
+        kpos = jnp.arange(kv_len)[None, :]
+        logits = jnp.where(kpos <= qpos, logits, -1e30)
+        a = jax.nn.softmax(logits, axis=-1)
+        outs.append(jnp.einsum("hqs,shd->qhd", a, v))
+    return jnp.concatenate(outs, axis=0).astype(q.dtype)
+
+
 def swiglu_ffn_ref(x, w_gate, w_up, w_down):
     """x: (S,d); w_gate/w_up: (d,f); w_down: (f,d)."""
     h = jax.nn.silu(x @ w_gate) * (x @ w_up)

@@ -1,3 +1,10 @@
-from .engine import Request, ServeEngine
+from .engine import PagedServeEngine, Request, ServeEngine
+from .kv_pool import KVPool, OutOfPagesError
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = [
+    "KVPool",
+    "OutOfPagesError",
+    "PagedServeEngine",
+    "Request",
+    "ServeEngine",
+]

@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
+from ..core import stats
 from ..models import model as M
 
 
@@ -397,4 +398,380 @@ class ServeEngine:
                 out["plan_telemetry"] = self.plan_cache.entry_meta(
                     self.autochunk_result.cache_key
                 )
+        return out
+
+
+# ===========================================================================
+# Continuous batching on a paged KV pool
+# ===========================================================================
+
+@dataclass
+class _SeqState:
+    """A running sequence: scheduler-side view of one admitted request."""
+
+    req: Request
+    seq_id: int
+    prefilled: int = 0        # prompt tokens already written into the pool
+    kv_len: int = 0           # total tokens written (prompt part + generated)
+
+    @property
+    def in_prefill(self) -> bool:
+        return self.prefilled < len(self.req.prompt)
+
+
+class PagedServeEngine:
+    """Continuous batching over a paged KV pool (the serving rewrite).
+
+    Where :class:`ServeEngine` holds ``max_batch`` fixed slots — every
+    admitted sequence paying ``exec_len`` worth of dense KV — this engine
+    shares one :class:`~repro.serving.kv_pool.KVPool` across all sequences
+    and schedules **mixed steps**: each engine step assembles one ragged
+    batch holding a single token for every decoding sequence *plus* a
+    planner-sized chunk of prompt for sequences still prefilling, and runs
+    it through the ragged paged flash-attention kernel in one call.  The
+    consequences CI asserts:
+
+    * admission is bounded by **free pages, not slots** — a request is
+      admitted iff the pool can reserve ``prompt + max_new_tokens`` worth
+      of pages (so an admitted sequence can never OOM mid-decode), and
+      retired sequences' pages are immediately reusable;
+    * prefill is **chunked by the AutoChunk estimator**
+      (:func:`~repro.core.estimation.plan_prefill_chunk`): the chunk size
+      is the largest power of two whose one-block activation peak fits the
+      engine's activation budget, so the planner and the batcher co-own
+      one memory budget instead of a fixed ``--prefill-chunk`` knob;
+    * KV memory has **zero padding waste**: sequences occupy exactly
+      ``ceil(len / page_size)`` pages, TTFT is decoupled from the decode
+      batch shape, and the only slack is the sub-page tail the pool's
+      fragmentation counters report exactly.
+
+    Two step shapes are compiled per engine lifetime: ``(max_seqs,
+    prefill_chunk)`` for steps containing prefill rows and ``(max_seqs,
+    1)`` for pure-decode steps.  Query padding inside a step is transient
+    activation memory; the persistent KV is never padded.
+
+    Supports the standard GQA attention families (dense decoders, causal,
+    full attention); SSM/hybrid and MLA caches keep the slot engine.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        max_seqs: int = 4,
+        max_len: int = 256,
+        page_size: int = 16,
+        num_pages: Optional[int] = None,
+        autochunk_budget: Optional[float] = None,
+        prefill_chunk="auto",
+        greedy: bool = True,
+        seed: int = 0,
+    ):
+        from ..core.estimation import plan_prefill_chunk
+        from .kv_pool import KVPool
+
+        if cfg.family not in ("dense", "vlm") or cfg.mla or not cfg.causal:
+            raise ValueError(
+                "PagedServeEngine serves causal dense/GQA decoders;"
+                f" got family={cfg.family!r} mla={cfg.mla} causal={cfg.causal}"
+            )
+        if cfg.sliding_window is not None and cfg.sliding_window < max_len:
+            raise ValueError("paged serving keeps the full context; use the"
+                             " slot engine for sliding-window archs")
+        self.cfg = cfg
+        self.params = params
+        self.max_seqs = max_seqs
+        self.max_len = max_len
+        self.page_size = page_size
+        self.greedy = greedy
+        self.key = jax.random.PRNGKey(seed)
+        self.autochunk_budget = autochunk_budget
+
+        if num_pages is None:
+            # default capacity: every row of the step batch can hold a
+            # max_len sequence (the paged win is that they rarely do)
+            num_pages = max_seqs * (-(-max_len // page_size))
+        self.pool = KVPool.for_config(
+            cfg, num_pages=num_pages, page_size=page_size
+        )
+        self.max_pages_per_seq = self.pool.pages_for(max_len)
+
+        # planner-driven chunked prefill: the AutoChunk estimator sizes the
+        # chunk from the activation budget (ratio of the full-prefill peak)
+        if prefill_chunk == "auto":
+            self.prefill_plan = plan_prefill_chunk(
+                cfg,
+                budget=autochunk_budget if autochunk_budget else 0.5,
+                max_len=max_len,
+            )
+            self.prefill_chunk = min(self.prefill_plan.chunk, max_len)
+        else:
+            self.prefill_plan = None
+            self.prefill_chunk = int(prefill_chunk)
+        if self.prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+
+        self.waiting: List[Request] = []
+        self.running: List[_SeqState] = []
+        self.finished: List[Request] = []
+        self._next_seq_id = 0
+        self._step_fns: Dict[int, Any] = {}
+        self.sched_stats = {
+            "steps": 0,
+            "mixed_steps": 0,
+            "prefill_steps": 0,
+            "decode_steps": 0,
+            "prefill_chunks": 0,
+            "decode_tokens": 0,
+            "admission_refusals": 0,
+            "step_compiles": 0,
+        }
+
+    # ------------------------------------------------------------------
+    def _step_fn(self, q_max: int):
+        """One jitted ragged step at query width ``q_max`` (compiled once)."""
+        if q_max in self._step_fns:
+            return self._step_fns[q_max]
+
+        cfg, params = self.cfg, self.params
+        from ..kernels import ops
+        from ..kernels.paged_attention import (
+            interleave_kv,
+            paged_attention_blocked,
+        )
+        from ..models import layers as L
+
+        S = self.max_seqs
+        ps = self.page_size
+        mp = self.max_pages_per_seq
+        n_flat = self.pool.pages.shape[1] * ps        # includes trash page
+        trash_slot = self.pool.trash_page * ps
+
+        def layer_params(i):
+            if cfg.scan_layers:
+                return jax.tree.map(lambda a: a[i], params["blocks"])
+            return params["blocks"][i]
+
+        def step(pages, tokens, q_lens, kv_lens, page_table):
+            # tokens: (S, q_max) int32; q_lens/kv_lens: (S,) int32 with
+            # kv_lens counting context INCLUDING this step's new tokens;
+            # page_table: (S, mp) int32
+            positions = (kv_lens - q_lens)[:, None] + jnp.arange(
+                q_max, dtype=jnp.int32
+            )[None, :]
+            valid = jnp.arange(q_max)[None, :] < q_lens[:, None]
+
+            logical = jnp.clip(positions // ps, 0, mp - 1)
+            phys = jnp.take_along_axis(page_table, logical, axis=1)
+            slots = phys * ps + positions % ps
+            slots = jnp.where(valid, slots, trash_slot).reshape(-1)
+
+            h = L.embed(cfg, params["embed"], tokens)  # (S, q_max, d)
+            for i in range(cfg.n_layers):
+                p = layer_params(i)
+                hn = L.apply_norm(cfg, h, p["ln1"])
+                q, k, v = L.attn_project_qkv(cfg, p["attn"], hn, positions)
+                new_kv = interleave_kv(
+                    k.reshape(S * q_max, cfg.n_kv_heads, cfg.hd),
+                    v.reshape(S * q_max, cfg.n_kv_heads, cfg.hd),
+                ).astype(pages.dtype)
+                flat = pages[i].reshape(n_flat, 2 * cfg.n_kv_heads, cfg.hd)
+                flat = flat.at[slots].set(new_kv)
+                pages = pages.at[i].set(flat.reshape(pages.shape[1:]))
+                o = paged_attention_blocked(
+                    q, pages[i], page_table, q_lens, kv_lens,
+                    interpret=ops.INTERPRET,
+                )
+                h = h + o.reshape(S, q_max, -1) @ p["attn"]["wo"]
+                hn = L.apply_norm(cfg, h, p["ln2"])
+                h = h + L.mlp(cfg, p["mlp"], hn)
+
+            h = L.apply_norm(cfg, h, params["final_norm"])
+            last = h[jnp.arange(S), jnp.clip(q_lens - 1, 0, q_max - 1)]
+            logits = L.unembed(cfg, params["embed"], last)   # (S, V)
+            return logits, pages
+
+        fn = jax.jit(step)
+        self._step_fns[q_max] = fn
+        self.sched_stats["step_compiles"] += 1
+        return fn
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        total = len(req.prompt) + req.max_new_tokens
+        if total > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new = {total} exceeds"
+                f" max_len={self.max_len}"
+            )
+        self.waiting.append(req)
+
+    def _admit(self):
+        """FIFO admission bounded by pool pages, not batch slots."""
+        from .kv_pool import OutOfPagesError
+
+        while self.waiting and len(self.running) < self.max_seqs:
+            req = self.waiting[0]
+            need = len(req.prompt) + req.max_new_tokens
+            sid = self._next_seq_id
+            try:
+                self.pool.reserve(sid, need)
+            except OutOfPagesError:
+                # head-of-line blocking: wait for pages_freed, keep FIFO order
+                self.sched_stats["admission_refusals"] += 1
+                stats.bump("admission_refusals")
+                break
+            self._next_seq_id += 1
+            self.waiting.pop(0)
+            self.running.append(_SeqState(req=req, seq_id=sid))
+        return
+
+    def _retire(self):
+        still = []
+        for st in self.running:
+            req = st.req
+            hit_eos = (
+                req.eos_id is not None
+                and req.generated
+                and req.generated[-1] == req.eos_id
+            )
+            if not st.in_prefill and (
+                len(req.generated) >= req.max_new_tokens or hit_eos
+            ):
+                req.done = True
+                req.finished_at = time.time()
+                self.finished.append(req)
+                self.pool.free(st.seq_id)
+            else:
+                still.append(st)
+        self.running = still
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """Admit -> one mixed ragged step -> sample -> retire."""
+        self._admit()
+        if not self.running:
+            return
+
+        # schedule: every decode row rides along; prefill rows consume a
+        # shared per-step chunk budget (the planner's activation bound)
+        chunk_budget = self.prefill_chunk
+        sched: List[tuple] = []                  # (state, n_new, tokens)
+        n_prefill_rows = n_decode_rows = 0
+        for st in self.running[: self.max_seqs]:
+            prompt = st.req.prompt
+            if st.in_prefill:
+                if chunk_budget <= 0:
+                    continue                      # waits for the next step
+                take = min(chunk_budget, len(prompt) - st.prefilled)
+                toks = prompt[st.prefilled: st.prefilled + take]
+                chunk_budget -= take
+                n_prefill_rows += 1
+                sched.append((st, take, toks))
+            else:
+                n_decode_rows += 1
+                sched.append((st, 1, [st.req.generated[-1]]))
+        if not sched:
+            return
+
+        q_max = self.prefill_chunk if n_prefill_rows else 1
+        import numpy as np
+
+        S = self.max_seqs
+        tokens = np.zeros((S, q_max), np.int32)
+        q_lens = np.zeros((S,), np.int32)
+        kv_lens = np.zeros((S,), np.int32)
+        seq_ids: List[Optional[int]] = [None] * S
+        for row, (st, take, toks) in enumerate(sched):
+            tokens[row, :take] = toks
+            q_lens[row] = take
+            kv_lens[row] = st.kv_len + take
+            seq_ids[row] = st.seq_id
+            self.pool.ensure(st.seq_id, st.kv_len + take)
+        page_table = self.pool.table_array(seq_ids, self.max_pages_per_seq)
+
+        fn = self._step_fn(q_max)
+        logits, self.pool.pages = fn(
+            self.pool.pages,
+            jnp.asarray(tokens),
+            jnp.asarray(q_lens),
+            jnp.asarray(kv_lens),
+            page_table,
+        )
+
+        # sample one token for every row that finished its context work
+        need_rows = []
+        for row, (st, take, _toks) in enumerate(sched):
+            if st.in_prefill:
+                st.prefilled += take
+                st.kv_len += take
+                if not st.in_prefill:
+                    need_rows.append((row, st, True))
+                else:
+                    stats.bump("prefill_chunks")
+                    self.sched_stats["prefill_chunks"] += 1
+            else:
+                st.kv_len += take
+                need_rows.append((row, st, False))
+        if need_rows:
+            if self.greedy:
+                nxt = jnp.argmax(logits, axis=-1)
+            else:
+                self.key, sub = jax.random.split(self.key)
+                nxt = jax.random.categorical(sub, logits)
+            nxt = jax.device_get(nxt)
+            now = time.time()
+            for row, st, finished_prefill in need_rows:
+                st.req.generated.append(int(nxt[row]))
+                if finished_prefill:
+                    stats.bump("prefill_chunks")
+                    self.sched_stats["prefill_chunks"] += 1
+                    st.req.first_token_at = now
+                else:
+                    self.sched_stats["decode_tokens"] += 1
+
+        self.sched_stats["steps"] += 1
+        if n_prefill_rows and n_decode_rows:
+            stats.bump("mixed_steps")
+            self.sched_stats["mixed_steps"] += 1
+        elif n_prefill_rows:
+            self.sched_stats["prefill_steps"] += 1
+        else:
+            self.sched_stats["decode_steps"] += 1
+        self._retire()
+
+    def run(self, max_steps: int = 100_000) -> List[Request]:
+        for _ in range(max_steps):
+            if not self.waiting and not self.running:
+                break
+            self.step()
+        return self.finished
+
+    # ------------------------------------------------------------------
+    def metrics(self) -> dict:
+        done = self.finished
+        toks = sum(len(r.generated) for r in done)
+        ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
+        lats = [r.latency_s for r in done if r.latency_s is not None]
+        span = max((r.finished_at for r in done), default=0.0) - min(
+            (r.submitted_at for r in done), default=0.0
+        )
+        out = {
+            "requests": len(done),
+            "tokens": toks,
+            "throughput_tok_s": toks / span if span > 0 else 0.0,
+            "mean_ttft_s": sum(ttfts) / len(ttfts) if ttfts else 0.0,
+            "mean_latency_s": sum(lats) / len(lats) if lats else 0.0,
+            "prefill_chunk": self.prefill_chunk,
+            "scheduler": dict(self.sched_stats),
+            "kv_pool": self.pool.stats(),
+        }
+        if self.prefill_plan is not None:
+            out["prefill_plan"] = {
+                "chunk": self.prefill_plan.chunk,
+                "budget_bytes": self.prefill_plan.budget_bytes,
+                "peak_bytes": self.prefill_plan.peak_bytes,
+                "fits": self.prefill_plan.fits,
+            }
         return out

@@ -13,10 +13,17 @@ headline figure is ``padded_kv_bytes_saved`` — fixed-slot KV bytes
 (``max_batch * exec_len * token_bytes``) minus the paged pool's peak
 (``peak_pages_in_use * page_size * token_bytes``).
 
+A second workload measures **prefix sharing** (PR 7): N requests with a
+common prompt run through the paged engine with the radix prefix cache
+off and on.  Reported: ``prefix_hit_rate``, prompt tokens reused, TTFT
+both ways, and peak pages both ways (sharing must not cost pages).
+
 ``benchmarks.run --bench-check`` re-measures and gates on the paged
 engine's *counter invariants* (mixed steps happened, every page freed,
-zero padded waste, bytes saved did not regress) — wall-clock numbers are
-informational only, CI machines are too noisy to gate on them.
+zero padded waste, bytes saved did not regress, prefix sharing stays
+token-exact with a hit rate no worse than the committed baseline) —
+wall-clock numbers are informational only, CI machines are too noisy to
+gate on them.
 """
 from __future__ import annotations
 
@@ -41,6 +48,9 @@ MAX_SEQS = 3       # paged step-batch rows
 MAX_BATCH = 3      # fixed-slot decode slots (kept equal for a fair compare)
 BUDGET = 0.5
 SEED = 0
+# shared-prefix workload: every request opens with the same system prompt
+SHARED_REQUESTS = 6
+SHARED_PREFIX_LEN = 24
 
 
 def _staggered_lens(n: int, base: int, cap: int) -> List[int]:
@@ -63,6 +73,86 @@ def _drive(engine, prompts: List[List[int]]) -> Dict:
         "decode_tok_s": round(toks / wall, 2) if wall > 0 else 0.0,
         "mean_ttft_s": round(m["mean_ttft_s"], 4),
         "metrics": m,
+    }
+
+
+def _shared_prefix_prompts(cfg) -> List[List[int]]:
+    """N prompts opening with one shared system prompt, divergent tails."""
+    rng = np.random.default_rng(SEED + 1)
+    shared = rng.integers(0, cfg.vocab_size, SHARED_PREFIX_LEN).tolist()
+    return [shared + [int(i + 1)] * 3 for i in range(SHARED_REQUESTS)]
+
+
+def _drive_shared(cfg, params, prompts: List[List[int]], *,
+                  prefix_cache: bool) -> Dict:
+    """Staggered shared-prefix run: request 0 drains first so its prefix
+    is cached before the rest arrive (cache-off runs the same schedule
+    for a like-for-like TTFT compare)."""
+    before = stats.snapshot()
+    engine = PagedServeEngine(
+        cfg, params,
+        max_seqs=MAX_SEQS, max_len=MAX_LEN, page_size=PAGE_SIZE,
+        autochunk_budget=BUDGET, greedy=True, seed=SEED,
+        prefix_cache=prefix_cache,
+    )
+    reqs = [
+        Request(rid=i, prompt=p, max_new_tokens=MAX_NEW)
+        for i, p in enumerate(prompts)
+    ]
+    t0 = time.time()
+    engine.submit(reqs[0])
+    engine.run()
+    for r in reqs[1:]:
+        engine.submit(r)
+    engine.run()
+    wall = time.time() - t0
+    delta = stats.delta(before)
+    m = engine.metrics()
+    drained_clean = True
+    if engine.prefix_cache is not None:
+        engine.prefix_cache.flush()
+        drained_clean = (
+            engine.pool.free_pages == engine.pool.num_pages
+            and engine.pool.alloc_events == engine.pool.free_events
+        )
+    return {
+        "wall_s": round(wall, 4),
+        "mean_ttft_s": round(m["mean_ttft_s"], 4),
+        "prefix_hits": delta["prefix_hits"],
+        "prefix_tokens_reused": delta["prefix_tokens_reused"],
+        "cow_copies": delta["cow_copies"],
+        "prefill_chunks": delta["prefill_chunks"],
+        "peak_pages_in_use": engine.pool.peak_pages_in_use,
+        "drained_clean": drained_clean,
+        "outputs": [r.generated for r in reqs],
+    }
+
+
+def run_prefix_bench(cfg, params) -> Dict:
+    """Shared-prefix workload: paged engine with the radix cache off/on."""
+    prompts = _shared_prefix_prompts(cfg)
+    off = _drive_shared(cfg, params, prompts, prefix_cache=False)
+    on = _drive_shared(cfg, params, prompts, prefix_cache=True)
+    outputs_match = off.pop("outputs") == on.pop("outputs")
+    total_prompt_tokens = sum(len(p) for p in prompts)
+    return {
+        "requests": SHARED_REQUESTS,
+        "shared_prefix_len": SHARED_PREFIX_LEN,
+        "prompt_tokens_total": total_prompt_tokens,
+        "prefix_hit_rate": round(on["prefix_hits"] / SHARED_REQUESTS, 4),
+        "tokens_reused_frac": round(
+            on["prefix_tokens_reused"] / total_prompt_tokens, 4
+        ),
+        # prefill work the cache removed: the deterministic stand-in for
+        # TTFT improvement (wall clock stays informational)
+        "prefill_chunks_saved": off["prefill_chunks"] - on["prefill_chunks"],
+        "outputs_match": outputs_match,
+        "ttft_no_cache_s": off["mean_ttft_s"],
+        "ttft_with_cache_s": on["mean_ttft_s"],
+        "peak_pages_without_cache": off["peak_pages_in_use"],
+        "peak_pages_with_cache": on["peak_pages_in_use"],
+        "no_cache": off,
+        "with_cache": on,
     }
 
 
@@ -129,6 +219,7 @@ def run_serving_bench() -> Dict:
         "paged": paged,
         "fixed_slot": fixed,
         "padded_kv_bytes_saved": fixed_kv - paged_peak_kv,
+        "prefix_sharing": run_prefix_bench(cfg, params),
     }
 
 
@@ -169,6 +260,37 @@ def check_against(baseline: Dict, fresh: Dict) -> list:
             f"paged.step_compiles grew: {p['step_compiles']}"
             f" > baseline {base_compiles}"
         )
+    ps = fresh.get("prefix_sharing")
+    if ps is not None:
+        if not ps["outputs_match"]:
+            problems.append(
+                "prefix sharing changed greedy outputs (cache on vs off)"
+            )
+        if ps["prefix_hit_rate"] <= 0:
+            problems.append("prefix_hit_rate is 0 on a shared workload")
+        if not ps["with_cache"]["drained_clean"]:
+            problems.append(
+                "prefix cache leaked pages (flush did not drain the pool)"
+            )
+        if ps["peak_pages_with_cache"] > ps["peak_pages_without_cache"]:
+            problems.append(
+                f"prefix sharing raised peak pages:"
+                f" {ps['peak_pages_with_cache']} >"
+                f" {ps['peak_pages_without_cache']}"
+            )
+        base_ps = baseline.get("prefix_sharing")
+        if base_ps is not None:
+            if ps["prefix_hit_rate"] < base_ps["prefix_hit_rate"]:
+                problems.append(
+                    f"prefix_hit_rate regressed: {ps['prefix_hit_rate']}"
+                    f" < baseline {base_ps['prefix_hit_rate']}"
+                )
+            if ps["prefill_chunks_saved"] < base_ps["prefill_chunks_saved"]:
+                problems.append(
+                    f"prefill_chunks_saved regressed:"
+                    f" {ps['prefill_chunks_saved']}"
+                    f" < baseline {base_ps['prefill_chunks_saved']}"
+                )
     return problems
 
 
@@ -197,5 +319,16 @@ def run(rows) -> None:
             "serving_kv_saved",
             0.0,
             f"bytes={out['padded_kv_bytes_saved']}",
+        )
+    )
+    ps = out["prefix_sharing"]
+    rows.append(
+        (
+            "serving_prefix_cache",
+            ps["with_cache"]["wall_s"] * 1e6,
+            f"hit_rate={ps['prefix_hit_rate']}"
+            f" reused_frac={ps['tokens_reused_frac']}"
+            f" chunks_saved={ps['prefill_chunks_saved']}"
+            f" exact={int(ps['outputs_match'])}",
         )
     )

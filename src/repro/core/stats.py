@@ -67,6 +67,20 @@ _COUNTERS: Dict[str, int] = {
     # requests the scheduler declined to admit because the pool could not
     # reserve enough pages (admission is bounded by pages, not slots)
     "admission_refusals": 0,
+    # prefix-sharing radix cache (serving.prefix_cache / KVPool refcounts):
+    # ``prefix_hits`` counts admissions that matched a cached prompt prefix
+    # (their prefill starts at the divergence point), ``prefix_tokens_reused``
+    # the prompt tokens whose prefill was skipped entirely;
+    # ``cow_copies`` counts partial boundary pages copy-on-written so a
+    # matcher can extend a shared page without corrupting it;
+    # ``pages_spilled``/``pages_restored`` count ref-free cached pages moved
+    # to the host spill buffer under pool pressure and brought back on
+    # re-match (a drained spill tier has spilled == restored + dropped).
+    "prefix_hits": 0,
+    "prefix_tokens_reused": 0,
+    "cow_copies": 0,
+    "pages_spilled": 0,
+    "pages_restored": 0,
 }
 
 

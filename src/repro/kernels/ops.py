@@ -26,14 +26,42 @@ from .rglru_scan import rglru_scan as _rglru
 from .ssd_scan import ssd_scan as _ssd
 
 
-def interpret_default() -> bool:
-    """Resolve interpret mode: env override first, then backend detection."""
+_INTERPRET_RESOLVED: "bool | None" = None
+
+
+def _resolve_interpret() -> bool:
+    """Read the env override, then fall back to backend detection."""
     env = os.environ.get("AUTOCHUNK_PALLAS_INTERPRET", "")
     if env in ("1", "true"):
         return True
     if env in ("0", "false"):
         return False
     return jax.default_backend() != "tpu"
+
+
+def interpret_default() -> bool:
+    """Resolve interpret mode, memoized for the process lifetime.
+
+    The env var is read (and the backend probed) exactly once — dispatch
+    paths can call this freely without a per-call ``os.environ`` read.
+    Tests that need a different mode use :func:`set_interpret` explicitly
+    instead of mutating the environment mid-process.
+    """
+    global _INTERPRET_RESOLVED
+    if _INTERPRET_RESOLVED is None:
+        _INTERPRET_RESOLVED = _resolve_interpret()
+    return _INTERPRET_RESOLVED
+
+
+def set_interpret(value: "bool | None") -> bool:
+    """Explicit override for tests: True/False forces the mode, None drops
+    back to lazy env/backend resolution.  Returns the now-active mode.
+    Call it before the first use of a kernel wrapper — already-traced jit
+    entries keep the mode they were traced with."""
+    global _INTERPRET_RESOLVED, INTERPRET
+    _INTERPRET_RESOLVED = value
+    INTERPRET = interpret_default()
+    return INTERPRET
 
 
 INTERPRET = interpret_default()

@@ -28,6 +28,17 @@ different prompt length) so short and long requests overlap — the
 ``[serve] paged:`` status line then reports the continuous-batching
 counters (``mixed_steps``, ``pages_allocated``/``pages_freed``,
 ``padded_kv_waste_bytes=0``) that CI's paged serving smoke greps.
+
+``--prefix-cache`` (paged only) enables the prefix-sharing radix cache;
+``--spill-pages N`` adds the host spill tier.  ``--shared-prefix L`` runs
+the deterministic prefix scenario CI's prefix smoke greps: requests share
+an ``L``-token system prompt and are served **sequentially** (each drains
+before the next submits, so every later request can match what the earlier
+one cached), except every third request, which gets a one-off un-cached
+prompt — the pool-pressure filler that forces cached pages to spill so the
+following shared request restores them.  The ``[serve] prefix:`` line then
+reports ``prefix_hits``/``prefix_tokens_reused``/``cow_copies``/
+``pages_spilled``/``pages_restored``.
 """
 from __future__ import annotations
 
@@ -56,6 +67,7 @@ def serve_paged(cfg, params, rng, args):
         max_seqs=args.max_seqs, max_len=args.max_len,
         page_size=args.page_size, num_pages=args.num_pages,
         autochunk_budget=args.autochunk, prefill_chunk=chunk,
+        prefix_cache=args.prefix_cache, spill_pages=args.spill_pages,
         greedy=not args.sample, seed=args.seed,
     )
     plan = engine.prefill_plan
@@ -67,22 +79,50 @@ def serve_paged(cfg, params, rng, args):
           f" pool {engine.pool.num_pages} pages x {engine.page_size} tokens,"
           f" prefill_chunk={engine.prefill_chunk}{plan_note}")
 
-    # staggered-length prompts: short decode-bound requests overlap with
-    # long prefill-bound ones, which is what forces mixed steps
-    if args.stagger:
-        cap = max(1, args.max_len - args.max_new)
-        lens = [
-            max(1, min(cap, args.prompt_len * (1 + 3 * (i % 3)) // 2))
-            for i in range(args.requests)
-        ]
-    else:
-        lens = [args.prompt_len] * args.requests
-
     t0 = time.time()
-    for i, n in enumerate(lens):
-        prompt = rng.integers(0, cfg.vocab_size, n).tolist()
-        engine.submit(Request(rid=i, prompt=prompt, max_new_tokens=args.max_new))
-    done = engine.run()
+    if args.shared_prefix > 0:
+        # deterministic prefix scenario (CI's prefix smoke): shared-prompt
+        # requests served sequentially, with every third request a one-off
+        # un-cached pressure filler (forces spill; the next shared request
+        # restores).  Sequential draining guarantees each later request
+        # sees the earlier one's cache insert.
+        L = min(args.shared_prefix, args.prompt_len)
+        shared = rng.integers(0, cfg.vocab_size, L).tolist()
+        lens = [args.prompt_len] * args.requests
+        for i in range(args.requests):
+            if i % 3 == 2:
+                prompt = rng.integers(
+                    0, cfg.vocab_size, args.prompt_len
+                ).tolist()
+                req = Request(rid=i, prompt=prompt,
+                              max_new_tokens=args.max_new,
+                              cache_prefix=False)
+            else:
+                tail = rng.integers(
+                    0, cfg.vocab_size, args.prompt_len - L
+                ).tolist()
+                req = Request(rid=i, prompt=shared + tail,
+                              max_new_tokens=args.max_new)
+            engine.submit(req)
+            engine.run()
+        done = engine.finished
+    else:
+        # staggered-length prompts: short decode-bound requests overlap
+        # with long prefill-bound ones, which is what forces mixed steps
+        if args.stagger:
+            cap = max(1, args.max_len - args.max_new)
+            lens = [
+                max(1, min(cap, args.prompt_len * (1 + 3 * (i % 3)) // 2))
+                for i in range(args.requests)
+            ]
+        else:
+            lens = [args.prompt_len] * args.requests
+        for i, n in enumerate(lens):
+            prompt = rng.integers(0, cfg.vocab_size, n).tolist()
+            engine.submit(
+                Request(rid=i, prompt=prompt, max_new_tokens=args.max_new)
+            )
+        done = engine.run()
     dt = time.time() - t0
     toks = sum(len(r.generated) for r in done)
     m = engine.metrics()
@@ -100,6 +140,19 @@ def serve_paged(cfg, params, rng, args):
         f" admission_refusals={d['admission_refusals']}"
         f" padded_kv_waste_bytes={m['kv_pool']['padded_kv_waste_bytes']}"
     )
+    if engine.prefix_cache is not None:
+        pc = m["prefix_cache"]
+        print(
+            "[serve] prefix:"
+            f" prefix_hits={d['prefix_hits']}"
+            f" prefix_tokens_reused={d['prefix_tokens_reused']}"
+            f" cow_copies={d['cow_copies']}"
+            f" pages_spilled={d['pages_spilled']}"
+            f" pages_restored={d['pages_restored']}"
+            f" cached_nodes={pc['nodes']}"
+            f" resident_pages={pc['resident_pages']}"
+            f" spilled_nodes={pc['spilled_nodes']}"
+        )
     print(f"[serve] kv pool: {m['kv_pool']}")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.generated[:8]}...")
@@ -154,6 +207,18 @@ def main(argv=None):
     ap.add_argument("--stagger", action="store_true",
                     help="staggered prompt lengths (request i gets a varied"
                          " length) so prefill and decode overlap")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="enable the prefix-sharing radix cache (paged"
+                         " engine only): matched prompt prefixes share"
+                         " ref-counted pool pages and skip prefill")
+    ap.add_argument("--spill-pages", type=int, default=0,
+                    help="host spill arena capacity in pages; >0 turns"
+                         " out-of-pages admission into retry-after-spill")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="serve the deterministic shared-system-prompt"
+                         " scenario (sequential drain; every 3rd request is"
+                         " a one-off un-cached pressure filler) — the CI"
+                         " prefix smoke")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)

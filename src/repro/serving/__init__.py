@@ -1,10 +1,13 @@
 from .engine import PagedServeEngine, Request, ServeEngine
 from .kv_pool import KVPool, OutOfPagesError
+from .prefix_cache import PrefixCache, PrefixMatch
 
 __all__ = [
     "KVPool",
     "OutOfPagesError",
     "PagedServeEngine",
+    "PrefixCache",
+    "PrefixMatch",
     "Request",
     "ServeEngine",
 ]

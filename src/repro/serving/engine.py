@@ -54,6 +54,10 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    # opt-out knob for the paged engine's prefix cache: when False this
+    # request may still *match* cached prefixes but its own prompt is never
+    # inserted (e.g. one-off prompts that would only pollute the radix tree)
+    cache_prefix: bool = True
     generated: List[int] = field(default_factory=list)
     done: bool = False
     submitted_at: float = field(default_factory=time.time)
@@ -450,6 +454,16 @@ class PagedServeEngine:
     1)`` for pure-decode steps.  Query padding inside a step is transient
     activation memory; the persistent KV is never padded.
 
+    ``prefix_cache=True`` inserts the radix
+    :class:`~repro.serving.prefix_cache.PrefixCache` between the allocator
+    and this scheduler: admission matches the prompt against cached
+    prefixes, seeds the page table with ref-shared pages (skipping their
+    prefill entirely — chunks start at the divergence point, with only the
+    partial boundary page copy-on-written), and completed prefills are
+    inserted for the next request to share.  With ``spill_pages > 0``,
+    out-of-pages admission becomes retry-after-spill: ref-free cached
+    pages are evicted LRU to the host arena and restored on re-match.
+
     Supports the standard GQA attention families (dense decoders, causal,
     full attention); SSM/hybrid and MLA caches keep the slot engine.
     """
@@ -465,11 +479,14 @@ class PagedServeEngine:
         num_pages: Optional[int] = None,
         autochunk_budget: Optional[float] = None,
         prefill_chunk="auto",
+        prefix_cache: bool = False,
+        spill_pages: int = 0,
         greedy: bool = True,
         seed: int = 0,
     ):
         from ..core.estimation import plan_prefill_chunk
         from .kv_pool import KVPool
+        from .prefix_cache import PrefixCache
 
         if cfg.family not in ("dense", "vlm") or cfg.mla or not cfg.causal:
             raise ValueError(
@@ -496,6 +513,15 @@ class PagedServeEngine:
             cfg, num_pages=num_pages, page_size=page_size
         )
         self.max_pages_per_seq = self.pool.pages_for(max_len)
+        # prefix-sharing radix cache: admission matches cached prompt
+        # prefixes onto ref-shared pool pages and skips their prefill;
+        # spill_pages > 0 adds the host spill tier (see serving.prefix_cache)
+        if spill_pages and not prefix_cache:
+            raise ValueError("spill_pages requires prefix_cache=True")
+        self.prefix_cache = (
+            PrefixCache(self.pool, spill_pages=spill_pages)
+            if prefix_cache else None
+        )
 
         # planner-driven chunked prefill: the AutoChunk estimator sizes the
         # chunk from the activation budget (ratio of the full-prefill peak)
@@ -526,6 +552,9 @@ class PagedServeEngine:
             "decode_tokens": 0,
             "admission_refusals": 0,
             "step_compiles": 0,
+            "prefix_hits": 0,
+            "prefix_tokens_reused": 0,
+            "spill_retries": 0,
         }
 
     # ------------------------------------------------------------------
@@ -607,6 +636,36 @@ class PagedServeEngine:
             )
         self.waiting.append(req)
 
+    def _reserve(self, sid: int, need: int, match) -> None:
+        """One pool reservation, seeded by the prefix match when present.
+
+        On :class:`OutOfPagesError` with the prefix cache enabled, asks the
+        cache to release the shortfall (spill-to-host under pressure, LRU
+        drop otherwise; the matched pages themselves are protected) and
+        retries once — admission is retry-after-spill, not refuse.
+        """
+        from .kv_pool import OutOfPagesError
+
+        kwargs = {}
+        if match is not None and match.matched_tokens > 0:
+            kwargs = dict(
+                shared_pages=match.full_pages,
+                shared_tokens=match.matched_tokens,
+                boundary_page=match.boundary_page,
+            )
+        try:
+            self.pool.reserve(sid, need, **kwargs)
+            return
+        except OutOfPagesError as e:
+            if self.prefix_cache is None:
+                raise
+            shortfall = e.need - e.free
+            protect = match.pages if match is not None else frozenset()
+            self.sched_stats["spill_retries"] += 1
+            if self.prefix_cache.release_pages(shortfall, protect=protect) < shortfall:
+                raise
+        self.pool.reserve(sid, need, **kwargs)
+
     def _admit(self):
         """FIFO admission bounded by pool pages, not batch slots."""
         from .kv_pool import OutOfPagesError
@@ -615,16 +674,33 @@ class PagedServeEngine:
             req = self.waiting[0]
             need = len(req.prompt) + req.max_new_tokens
             sid = self._next_seq_id
+            match = (
+                self.prefix_cache.lock_prefix(req.prompt)
+                if self.prefix_cache is not None else None
+            )
             try:
-                self.pool.reserve(sid, need)
+                self._reserve(sid, need, match)
             except OutOfPagesError:
-                # head-of-line blocking: wait for pages_freed, keep FIFO order
+                # head-of-line blocking: wait for pages_freed, keep FIFO
+                # order (any pages lock_prefix restored stay cached — they
+                # remain evictable, nothing leaks)
                 self.sched_stats["admission_refusals"] += 1
                 stats.bump("admission_refusals")
                 break
+            matched = match.matched_tokens if match is not None else 0
+            if matched > 0:
+                stats.bump("prefix_hits")
+                stats.bump("prefix_tokens_reused", matched)
+                self.sched_stats["prefix_hits"] += 1
+                self.sched_stats["prefix_tokens_reused"] += matched
             self._next_seq_id += 1
             self.waiting.pop(0)
-            self.running.append(_SeqState(req=req, seq_id=sid))
+            # matched tokens are already in the pool: prefill resumes at
+            # the divergence point (kv_len/prefilled start there)
+            self.running.append(
+                _SeqState(req=req, seq_id=sid, prefilled=matched,
+                          kv_len=matched)
+            )
         return
 
     def _retire(self):
@@ -707,6 +783,16 @@ class PagedServeEngine:
                 st.prefilled += take
                 st.kv_len += take
                 if not st.in_prefill:
+                    if self.prefix_cache is not None and st.req.cache_prefix:
+                        # the prompt's KV is now complete in the pool:
+                        # cache it so the next admission can share it
+                        n_prompt = len(st.req.prompt)
+                        self.prefix_cache.insert(
+                            st.req.prompt,
+                            self.pool.table(st.seq_id)[
+                                : self.pool.pages_for(n_prompt)
+                            ],
+                        )
                     need_rows.append((row, st, True))
                 else:
                     stats.bump("prefill_chunks")
@@ -767,6 +853,8 @@ class PagedServeEngine:
             "scheduler": dict(self.sched_stats),
             "kv_pool": self.pool.stats(),
         }
+        if self.prefix_cache is not None:
+            out["prefix_cache"] = self.prefix_cache.stats()
         if self.prefill_plan is not None:
             out["prefill_plan"] = {
                 "chunk": self.prefill_plan.chunk,

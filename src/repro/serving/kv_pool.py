@@ -26,21 +26,53 @@ is *internal* — the tail of each sequence's last table page.  That is
 bounded by ``page_size - 1`` tokens per sequence and reported exactly
 (``frag_token_slots`` / ``frag_bytes``); there is no ``exec_len`` padding
 (``padded_kv_waste_bytes`` is identically 0, the serving smoke greps it).
+
+Prefix sharing (PR 7) adds two layers on the same allocator:
+
+* **per-page refcounts**: a physical page may sit in several sequences'
+  tables (and in the radix cache) at once; ``free`` decrements, and only
+  the last holder's release returns the page to the LIFO free list.
+  ``reserve(shared_pages=...)`` seeds a new sequence's table with cached
+  prefix pages, and a partially-matched ``boundary_page`` is
+  **copy-on-written** into a fresh page so shared pages are immutable;
+* **host spill tier** (``enable_spill``): ref-free cached pages move to a
+  persistent host arena under pool pressure (``spill_page``) and return on
+  prefix re-match (``restore_page``), turning out-of-pages admission into
+  retry-after-spill instead of refusal.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core import stats
 from ..kernels.paged_attention import interleave_kv
 
 
 class OutOfPagesError(RuntimeError):
-    """Raised when a reservation asks for more pages than the pool holds."""
+    """Raised when a reservation asks for more pages than the pool holds.
+
+    Carries the sizing facts (``need``/``free``/``in_use``/``num_pages``) so
+    the scheduler can compute the shortfall for a spill-then-retry, and the
+    message names the remedies so a refusal in a serve log is actionable.
+    """
+
+    def __init__(self, what: str, *, need: int, free: int,
+                 in_use: int, num_pages: int):
+        self.need = need
+        self.free = free
+        self.in_use = in_use
+        self.num_pages = num_pages
+        super().__init__(
+            f"{what}: need {need} page(s) but only {free} free"
+            f" ({in_use} of {num_pages} in use);"
+            " retry after sequences retire, enable --prefix-cache/"
+            "--spill-pages to reclaim cached pages, or raise --num-pages"
+        )
 
 
 @dataclass
@@ -86,9 +118,26 @@ class KVPool:
         # LIFO free list: most-recently-freed pages are reused first
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
         self._seqs: Dict[int, _SeqAlloc] = {}
+        # per-page refcounts: every page outside the free list and outside a
+        # sequence's private reservation has an entry here.  A plain table
+        # page holds ref 1 (its sequence); prefix sharing adds one ref per
+        # extra holder (other sequences' tables, the radix cache).  decref
+        # to zero returns the page to the free list — the LIFO discipline
+        # and the exact fragmentation accounting are unchanged.
+        self._ref: Dict[int, int] = {}
         self.peak_pages_in_use = 0
         self.alloc_events = 0
         self.free_events = 0
+        self.cow_events = 0
+        # host spill tier (enable_spill): ref-free cached pages move here
+        # under pool pressure and come back on re-match.  ``_host`` is a
+        # persistent host-memory arena — the CPU stand-in for a pinned
+        # buffer (on TPU/GPU this would be a `device_put` into pinned_host
+        # memory so restores are a straight DMA).
+        self._host: Optional[np.ndarray] = None
+        self._host_free: List[int] = []
+        self.spill_events = 0
+        self.restore_events = 0
 
     @property
     def trash_page(self) -> int:
@@ -110,22 +159,87 @@ class KVPool:
     def can_reserve(self, n_tokens: int) -> bool:
         return self.pages_for(n_tokens) <= len(self._free)
 
+    # -- refcounts ------------------------------------------------------
+    def refcount(self, page: int) -> int:
+        """Current holder count of a physical page (0 = free or reserved)."""
+        return self._ref.get(page, 0)
+
+    def incref(self, page: int) -> None:
+        """Register one more holder of an already-allocated page."""
+        if page not in self._ref:
+            raise ValueError(f"page {page} is not allocated (cannot incref)")
+        self._ref[page] += 1
+
+    def decref(self, page: int) -> bool:
+        """Drop one holder; the last ref returns the page to the free list.
+
+        Returns True when the page actually went back to the free list.
+        """
+        n = self._ref.get(page)
+        if not n:
+            raise ValueError(f"page {page} is not allocated (cannot decref)")
+        if n > 1:
+            self._ref[page] = n - 1
+            return False
+        del self._ref[page]
+        self._free.append(page)
+        self.free_events += 1
+        stats.bump("pages_freed")
+        return True
+
     # -- allocation ----------------------------------------------------
-    def reserve(self, seq_id: int, n_tokens: int) -> None:
+    def reserve(
+        self,
+        seq_id: int,
+        n_tokens: int,
+        *,
+        shared_pages: Sequence[int] = (),
+        shared_tokens: int = 0,
+        boundary_page: Optional[int] = None,
+    ) -> None:
         """Set aside pages for ``n_tokens`` worth of KV (admission step).
+
+        Prefix sharing: ``shared_pages`` are full, already-populated pages
+        (from the radix cache) that seed the sequence's table — each gains
+        one ref and is **not** drawn from the free list, so a matched
+        prefix shrinks the reservation by exactly its page count.
+        ``boundary_page`` is a partially-matched page: its contents are
+        copy-on-written into one of the newly reserved pages (the matcher
+        must never write into a shared page), covering the first
+        ``shared_tokens - len(shared_pages) * page_size`` rows.
 
         Raises :class:`OutOfPagesError` without side effects if the free
         list cannot cover the request — the scheduler's admission bound.
         """
         if seq_id in self._seqs:
             raise ValueError(f"sequence {seq_id} already allocated")
-        need = self.pages_for(n_tokens)
+        if shared_tokens > n_tokens:
+            raise ValueError("shared_tokens exceeds the reservation")
+        need = self.pages_for(n_tokens) - len(shared_pages)
+        if need < (1 if boundary_page is not None else 0):
+            raise ValueError("shared pages exceed the reservation size")
         if need > len(self._free):
             raise OutOfPagesError(
-                f"need {need} pages for {n_tokens} tokens,"
-                f" only {len(self._free)} free"
+                f"sequence {seq_id}: reserving {n_tokens} tokens",
+                need=need, free=len(self._free),
+                in_use=self.pages_in_use, num_pages=self.num_pages,
             )
-        alloc = _SeqAlloc(reserved=[self._free.pop() for _ in range(need)])
+        table = []
+        for p in shared_pages:
+            self.incref(p)
+            table.append(p)
+        reserved = [self._free.pop() for _ in range(need)]
+        if boundary_page is not None:
+            # COW the partial boundary page: valid prefix rows are copied,
+            # the tail is overwritten as prefill/decode writes resume
+            dst = reserved.pop()
+            self._ref[dst] = 1
+            self.pages = self.pages.at[:, dst].set(self.pages[:, boundary_page])
+            table.append(dst)
+            self.cow_events += 1
+            stats.bump("cow_copies")
+        alloc = _SeqAlloc(reserved=reserved, table=table,
+                          tokens=shared_tokens)
         self._seqs[seq_id] = alloc
         self.alloc_events += need
         stats.bump("pages_allocated", need)
@@ -143,27 +257,154 @@ class KVPool:
         need = self.pages_for(n_tokens) - len(alloc.table)
         for _ in range(max(need, 0)):
             if alloc.reserved:
-                alloc.table.append(alloc.reserved.pop())
+                page = alloc.reserved.pop()
             elif self._free:
-                alloc.table.append(self._free.pop())
+                page = self._free.pop()
                 self.alloc_events += 1
                 stats.bump("pages_allocated")
             else:
                 raise OutOfPagesError(
                     f"sequence {seq_id}: table growth to {n_tokens} tokens"
-                    " exhausted both its reservation and the free list"
+                    " exhausted both its reservation and the free list",
+                    need=max(need, 0), free=0,
+                    in_use=self.pages_in_use, num_pages=self.num_pages,
                 )
+            self._ref[page] = 1
+            alloc.table.append(page)
         alloc.tokens = max(alloc.tokens, n_tokens)
         self.peak_pages_in_use = max(self.peak_pages_in_use, self.pages_in_use)
 
     def free(self, seq_id: int) -> int:
-        """Return every page (table + unused reservation) to the free list."""
+        """Release every page the sequence holds.
+
+        Unused reservation pages go straight back to the free list; table
+        pages drop one ref — a page shared with the radix cache or another
+        sequence survives, the last holder's decref returns it.  Returns
+        the number of pages that actually re-entered the free list.
+        """
         alloc = self._seqs.pop(seq_id)
-        released = alloc.table + alloc.reserved
-        self._free.extend(reversed(released))
-        self.free_events += len(released)
-        stats.bump("pages_freed", len(released))
-        return len(released)
+        returned = 0
+        for p in alloc.table:
+            if self.decref(p):
+                returned += 1
+        self._free.extend(reversed(alloc.reserved))
+        self.free_events += len(alloc.reserved)
+        stats.bump("pages_freed", len(alloc.reserved))
+        return returned + len(alloc.reserved)
+
+    # -- host spill tier -----------------------------------------------
+    def enable_spill(self, capacity: int) -> None:
+        """Allocate the host spill arena (``capacity`` pages).
+
+        A persistent host buffer the size of ``capacity`` pool pages;
+        ref-free cached pages are evicted here under pool pressure instead
+        of being dropped, and restored on prefix re-match.
+        """
+        if capacity < 1:
+            raise ValueError("spill capacity must be positive")
+        self._host = np.zeros(
+            (capacity, self.n_layers, self.page_size,
+             2 * self.n_kv_heads, self.head_dim),
+            dtype=jnp.dtype(self.dtype),
+        )
+        self._host_free = list(range(capacity - 1, -1, -1))
+
+    @property
+    def spill_enabled(self) -> bool:
+        return self._host is not None
+
+    @property
+    def host_capacity(self) -> int:
+        return 0 if self._host is None else self._host.shape[0]
+
+    @property
+    def spilled_pages(self) -> int:
+        return self.host_capacity - len(self._host_free)
+
+    def spill_page(self, page: int) -> int:
+        """Move a sole-holder device page to the host arena; returns the
+        host slot.  The device page returns to the free list (its single
+        ref — the caller's — is consumed)."""
+        if self._host is None:
+            raise RuntimeError("spill tier not enabled (enable_spill)")
+        if self._ref.get(page) != 1:
+            raise ValueError(
+                f"page {page} has refcount {self.refcount(page)};"
+                " only sole-holder pages may spill"
+            )
+        if not self._host_free:
+            raise RuntimeError("host spill arena is full")
+        slot = self._host_free.pop()
+        self._host[slot] = np.asarray(self.pages[:, page])
+        self.decref(page)
+        self.spill_events += 1
+        stats.bump("pages_spilled")
+        return slot
+
+    def restore_page(self, slot: int) -> int:
+        """Bring a spilled page back to the device; returns the physical
+        page id (refcount 1, owned by the caller).  Raises
+        :class:`OutOfPagesError` when the free list is empty — the caller
+        decides whether to spill something else first."""
+        if self._host is None:
+            raise RuntimeError("spill tier not enabled (enable_spill)")
+        if slot in self._host_free or not (0 <= slot < self.host_capacity):
+            raise ValueError(f"host slot {slot} holds no spilled page")
+        if not self._free:
+            raise OutOfPagesError(
+                f"restoring spilled host slot {slot}",
+                need=1, free=0,
+                in_use=self.pages_in_use, num_pages=self.num_pages,
+            )
+        page = self._free.pop()
+        self.pages = self.pages.at[:, page].set(jnp.asarray(self._host[slot]))
+        self._ref[page] = 1
+        self._host_free.append(slot)
+        self.alloc_events += 1
+        stats.bump("pages_allocated")
+        self.restore_events += 1
+        stats.bump("pages_restored")
+        self.peak_pages_in_use = max(self.peak_pages_in_use, self.pages_in_use)
+        return page
+
+    def drop_spilled(self, slot: int) -> None:
+        """Discard a spilled page (host-arena eviction, no device effect)."""
+        if slot in self._host_free or not (0 <= slot < self.host_capacity):
+            raise ValueError(f"host slot {slot} holds no spilled page")
+        self._host_free.append(slot)
+
+    # -- invariants ----------------------------------------------------
+    def check_invariants(self) -> None:
+        """Assert the allocator's conservation laws (test/debug hook).
+
+        Every physical page is in exactly one of: the free list, a
+        sequence's private reservation, or the refcounted set (tables +
+        external holders such as the prefix cache); a page may appear in
+        several tables only while its refcount covers every appearance.
+        """
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate pages in free list"
+        reserved: List[int] = []
+        table_counts: Dict[int, int] = {}
+        for sid, a in self._seqs.items():
+            reserved.extend(a.reserved)
+            for p in a.table:
+                table_counts[p] = table_counts.get(p, 0) + 1
+        assert len(set(reserved)) == len(reserved), "reserved page aliased"
+        refd = set(self._ref)
+        for group in (reserved, refd):
+            assert not free & set(group), "page both free and allocated"
+        assert not refd & set(reserved), "page both reserved and refcounted"
+        assert (
+            len(free) + len(refd) + len(reserved) == self.num_pages
+        ), "page conservation violated"
+        for p, n in table_counts.items():
+            assert self._ref.get(p, 0) >= n, (
+                f"page {p} in {n} tables with refcount {self._ref.get(p, 0)}"
+            )
+        for p, r in self._ref.items():
+            assert r > 0, f"page {p} held with nonpositive refcount"
+        assert self.spilled_pages >= 0
 
     # -- views for the kernel ------------------------------------------
     def table(self, seq_id: int) -> List[int]:
@@ -235,6 +476,11 @@ class KVPool:
             "pages_freed": self.free_events,
             "frag_token_slots": self.frag_token_slots(),
             "frag_bytes": self.frag_bytes(),
+            "cow_copies": self.cow_events,
+            "spilled_pages": self.spilled_pages,
+            "host_capacity_pages": self.host_capacity,
+            "pages_spilled": self.spill_events,
+            "pages_restored": self.restore_events,
             # paged KV has no exec_len padding by construction; the serving
             # smoke greps this literal invariant
             "padded_kv_waste_bytes": 0,

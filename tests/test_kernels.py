@@ -124,3 +124,27 @@ def test_ops_wrappers_route_and_match():
     vx = jnp.repeat(v, H // Kv, axis=2)
     ref = R.attention_ref(q, kx, vx, causal=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_interpret_default_is_memoized(monkeypatch):
+    """The env var is read once per process; tests override explicitly."""
+    from repro.kernels import ops
+
+    original = ops.interpret_default()
+    try:
+        # flipping the env after first resolution must not change the
+        # answer mid-process — dispatch paths rely on a stable mode
+        monkeypatch.setenv(
+            "AUTOCHUNK_PALLAS_INTERPRET", "0" if original else "1"
+        )
+        assert ops.interpret_default() is original
+        assert ops.INTERPRET is original
+        # set_interpret is the sanctioned override; it updates both views
+        assert ops.set_interpret(not original) is (not original)
+        assert ops.interpret_default() is (not original)
+        assert ops.INTERPRET is (not original)
+        # None drops back to lazy resolution: the env is consulted again
+        monkeypatch.setenv("AUTOCHUNK_PALLAS_INTERPRET", "1")
+        assert ops.set_interpret(None) is True
+    finally:
+        ops.set_interpret(original)

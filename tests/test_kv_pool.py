@@ -1,8 +1,12 @@
 """Paged KV pool allocator + paged attention equivalence tests."""
+import random
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.configs import get_config
 from repro.kernels import ops
@@ -98,6 +102,126 @@ def test_fragmentation_accounting():
     assert p.frag_token_slots() == 0
     # paged KV never pays exec_len padding
     assert p.stats()["padded_kv_waste_bytes"] == 0
+
+
+def test_out_of_pages_error_is_actionable():
+    """The refusal names the shortfall, occupancy, and the remedies."""
+    p = _pool(num_pages=4, page_size=4)
+    p.reserve(0, 12)  # 3 of 4 pages
+    with pytest.raises(OutOfPagesError) as ei:
+        p.reserve(1, 8)  # needs 2, only 1 free
+    e = ei.value
+    assert (e.need, e.free, e.in_use, e.num_pages) == (2, 1, 3, 4)
+    msg = str(e)
+    assert "need 2 page(s)" in msg and "only 1 free" in msg
+    assert "3 of 4 in use" in msg
+    assert "--num-pages" in msg
+
+
+# ======================================================================
+# property test: allocator invariants under random op interleavings
+# ======================================================================
+
+def _run_allocator_program(seed: int, n_ops: int = 60) -> None:
+    """One seeded random interleaving of every allocator operation.
+
+    Models the full PR-7 surface: plain reservations, shared (ref-counted)
+    reservations with COW boundaries, lazy table growth, frees, external
+    holds (the radix cache's refs), spill and restore.  After every op the
+    pool's conservation laws must hold (free + refcounted + reserved ==
+    num_pages; no page in two tables beyond its refcount), and at full
+    drain every page is back on the free list with allocated == freed.
+    """
+    rnd = random.Random(seed)
+    p = KVPool(n_layers=1, n_kv_heads=1, head_dim=4,
+               num_pages=8, page_size=4)
+    p.enable_spill(3)
+    live = {}        # seq_id -> reserved token budget
+    holds = []       # external page refs (the cache stand-in)
+    spilled = []     # host slots
+    next_sid = 0
+    for _ in range(n_ops):
+        op = rnd.choice(
+            ["reserve", "reserve_shared", "ensure", "free",
+             "hold", "unhold", "spill", "restore"]
+        )
+        free_before = p.free_pages
+        if op == "reserve":
+            try:
+                p.reserve(next_sid, rnd.randint(1, 20))
+                live[next_sid] = 20
+                next_sid += 1
+            except OutOfPagesError:
+                assert p.free_pages == free_before  # refusal is side-effect-free
+        elif op == "reserve_shared" and holds:
+            cand = list(dict.fromkeys(holds))
+            k = rnd.randint(0, min(2, len(cand)))
+            fulls, boundary, part = cand[:k], None, 0
+            if len(cand) > k and rnd.random() < 0.5:
+                boundary = cand[k]
+                part = rnd.randint(1, p.page_size - 1)
+            shared = k * p.page_size + part
+            n = shared + rnd.randint(1, 10)
+            try:
+                p.reserve(next_sid, n, shared_pages=fulls,
+                          shared_tokens=shared, boundary_page=boundary)
+                live[next_sid] = n
+                next_sid += 1
+            except OutOfPagesError:
+                assert p.free_pages == free_before
+        elif op == "ensure" and live:
+            sid = rnd.choice(list(live))
+            try:
+                p.ensure(sid, rnd.randint(1, live[sid] + 4))
+            except OutOfPagesError:
+                pass  # over-budget growth may fail mid-way; invariants hold
+        elif op == "free" and live:
+            sid = rnd.choice(list(live))
+            p.free(sid)
+            del live[sid]
+        elif op == "hold":
+            tabs = [pg for sid in live for pg in p.table(sid)]
+            if tabs:
+                pg = rnd.choice(tabs)
+                p.incref(pg)
+                holds.append(pg)
+        elif op == "unhold" and holds:
+            p.decref(holds.pop(rnd.randrange(len(holds))))
+        elif op == "spill":
+            sole = [pg for pg in dict.fromkeys(holds)
+                    if p.refcount(pg) == 1 and holds.count(pg) == 1]
+            if sole and p.spilled_pages < p.host_capacity:
+                pg = rnd.choice(sole)
+                holds.remove(pg)
+                spilled.append(p.spill_page(pg))
+        elif op == "restore" and spilled:
+            slot = rnd.choice(spilled)
+            try:
+                holds.append(p.restore_page(slot))
+                spilled.remove(slot)
+            except OutOfPagesError:
+                assert p.free_pages == free_before
+        p.check_invariants()
+    # ---- full drain: every page must come home, ledger balanced -------
+    for sid in list(live):
+        p.free(sid)
+    while holds:
+        p.decref(holds.pop())
+    for i, slot in enumerate(list(spilled)):
+        if i % 2 == 0:
+            p.decref(p.restore_page(slot))  # restore then release
+        else:
+            p.drop_spilled(slot)            # host-side discard
+    p.check_invariants()
+    assert p.free_pages == p.num_pages
+    assert p.spilled_pages == 0
+    assert p.alloc_events == p.free_events
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+def test_pool_invariants_under_random_interleavings(seed):
+    _run_allocator_program(seed)
 
 
 def test_for_config_shapes():

@@ -1,0 +1,343 @@
+"""Prefix-sharing radix cache: matching, COW, spill tier, engine exactness."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import stats
+from repro.models import model as M
+from repro.serving import KVPool, PagedServeEngine, PrefixCache, Request
+
+
+def _pool(num_pages=16, page_size=4):
+    return KVPool(
+        n_layers=1, n_kv_heads=1, head_dim=4,
+        num_pages=num_pages, page_size=page_size,
+    )
+
+
+def _seed_cached_prompt(pool, cache, prompt, sid):
+    """Reserve+fill a sequence for ``prompt`` and insert it into the cache."""
+    pool.reserve(sid, len(prompt))
+    pool.ensure(sid, len(prompt))
+    cache.insert(prompt, pool.table(sid)[: pool.pages_for(len(prompt))])
+    return pool.table(sid)
+
+
+# ======================================================================
+# radix matching semantics (pool-level, no engine)
+# ======================================================================
+
+def test_match_full_and_partial_blocks():
+    pool = _pool(page_size=4)
+    cache = PrefixCache(pool)
+    prompt = [1, 2, 3, 4, 5, 6, 7, 8, 9, 10]   # blocks [1..4][5..8][9,10]
+    table = _seed_cached_prompt(pool, cache, prompt, sid=0)
+
+    # identical prompt: capped at len-1 -> 2 full pages + partial boundary
+    m = cache.lock_prefix(prompt)
+    assert m.matched_tokens == 9
+    assert m.full_pages == table[:2]
+    assert m.boundary_page == table[2]
+
+    # mid-block divergence: boundary is the diverging page
+    m = cache.lock_prefix([1, 2, 3, 4, 5, 99, 0, 0])
+    assert m.matched_tokens == 5
+    assert m.full_pages == table[:1]
+    assert m.boundary_page == table[1]
+
+    # block-aligned divergence: full pages only, no boundary
+    m = cache.lock_prefix([1, 2, 3, 4, 99, 98, 97, 96])
+    assert m.matched_tokens == 4
+    assert m.full_pages == table[:1]
+    assert m.boundary_page is None
+
+    # no shared prefix at all
+    m = cache.lock_prefix([42, 43, 44, 45])
+    assert m.matched_tokens == 0 and not m.full_pages
+
+    # single-token prompts can never match (cap = len-1 = 0)
+    assert cache.lock_prefix([1]).matched_tokens == 0
+
+
+def test_insert_reuses_and_upgrades_nodes():
+    pool = _pool(page_size=4)
+    cache = PrefixCache(pool)
+    table0 = _seed_cached_prompt(pool, cache, [1, 2, 3, 4, 5, 6], sid=0)
+    assert cache.stats()["nodes"] == 2          # full block + partial tail
+    assert cache.stats()["cached_tokens"] == 6
+
+    # a longer prompt sharing the prefix upgrades the partial tail node to
+    # its fuller page instead of creating a sibling; the full first block
+    # keeps the originally cached page
+    table1 = _seed_cached_prompt(pool, cache, [1, 2, 3, 4, 5, 6, 7, 8, 9], 1)
+    s = cache.stats()
+    assert s["nodes"] == 3
+    assert s["cached_tokens"] == 9
+    m = cache.lock_prefix([1, 2, 3, 4, 5, 6, 7, 8, 9, 10])
+    assert m.matched_tokens == 9
+    assert m.full_pages == [table0[0], table1[1]]
+    assert m.boundary_page == table1[2]
+
+    # an exact re-insert of the same prompt creates nothing new
+    _seed_cached_prompt(pool, cache, [1, 2, 3, 4, 5, 6, 7, 8, 9], 2)
+    assert cache.stats()["nodes"] == 3
+    pool.check_invariants()
+    cache.check_invariants()
+
+
+def test_divergent_blocks_become_siblings():
+    pool = _pool(page_size=4)
+    cache = PrefixCache(pool)
+    _seed_cached_prompt(pool, cache, [1, 2, 3, 4, 5, 6, 7, 8], sid=0)
+    _seed_cached_prompt(pool, cache, [1, 2, 3, 4, 5, 6, 9, 9], sid=1)
+    # shared first block reused; second blocks diverge mid-block -> siblings
+    assert cache.stats()["nodes"] == 3
+    m = cache.lock_prefix([1, 2, 3, 4, 5, 6, 9, 9, 0])
+    assert m.matched_tokens == 8
+
+
+def test_cow_boundary_page_is_copied_not_shared():
+    pool = _pool(page_size=4)
+    cache = PrefixCache(pool)
+    prompt = [1, 2, 3, 4, 5, 6]
+    table = _seed_cached_prompt(pool, cache, prompt, sid=0)
+    # write recognizable KV into the cached pages
+    pool.pages = pool.pages.at[:, table[1]].set(7.25)
+
+    m = cache.lock_prefix([1, 2, 3, 4, 5, 9])   # diverges at token 5
+    assert m.matched_tokens == 5 and m.boundary_page == table[1]
+    before_cow = stats.snapshot()
+    pool.reserve(9, 8, shared_pages=m.full_pages,
+                 shared_tokens=m.matched_tokens, boundary_page=m.boundary_page)
+    assert stats.delta(before_cow)["cow_copies"] == 1
+    cow = pool.table(9)[1]
+    assert cow != table[1]
+    np.testing.assert_array_equal(
+        np.asarray(pool.pages[:, cow]), np.asarray(pool.pages[:, table[1]])
+    )
+    # writes to the COW copy must not reach the shared original
+    pool.pages = pool.pages.at[:, cow].set(-1.0)
+    assert float(pool.pages[0, table[1], 0, 0, 0]) == 7.25
+    # the fully-matched page is genuinely shared (same physical id, ref 2+)
+    assert pool.table(9)[0] == table[0]
+    assert pool.refcount(table[0]) >= 2
+    pool.check_invariants()
+
+
+def test_release_pages_spills_lru_then_drops():
+    pool = _pool(num_pages=8, page_size=4)
+    cache = PrefixCache(pool, spill_pages=2)
+    t0 = _seed_cached_prompt(pool, cache, [1, 2, 3, 4], sid=0)
+    t1 = _seed_cached_prompt(pool, cache, [9, 8, 7, 6], sid=1)
+    pool.free(0)
+    pool.free(1)   # both pages now cache-only (ref 1)
+    cache.lock_prefix([9, 8, 7, 6, 5])  # bump t1 -> t0 is LRU
+
+    before = stats.snapshot()
+    assert cache.release_pages(1) == 1
+    d = stats.delta(before)
+    assert d["pages_spilled"] == 1
+    s = cache.stats()
+    assert s["spilled_nodes"] == 1 and s["resident_pages"] == 1
+    # the LRU victim was t0: matching it again restores from the host tier
+    m = cache.lock_prefix([1, 2, 3, 4, 5])
+    assert m.matched_tokens == 4
+    d = stats.delta(before)
+    assert d["pages_restored"] == 1
+    assert cache.stats()["spilled_nodes"] == 0
+    # restored KV must round-trip bitwise (zeros here, but shape/layout real)
+    assert pool.refcount(m.full_pages[0]) == 1
+    pool.check_invariants()
+    cache.check_invariants()
+
+    # with the host arena full, release falls back to dropping LRU leaves
+    cache.release_pages(2)          # spill both resident pages (arena = 2)
+    assert cache.stats()["spilled_nodes"] == 2
+    t2 = _seed_cached_prompt(pool, cache, [5, 5, 5, 5], sid=2)
+    pool.free(2)
+    before_nodes = cache.stats()["nodes"]
+    assert cache.release_pages(1) == 1      # arena full -> drop
+    assert cache.stats()["nodes"] == before_nodes - 1
+    pool.check_invariants()
+
+
+def test_spill_roundtrip_preserves_kv_bytes():
+    pool = _pool(num_pages=4, page_size=4)
+    cache = PrefixCache(pool, spill_pages=2)
+    table = _seed_cached_prompt(pool, cache, [3, 1, 4, 1], sid=0)
+    want = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(0), pool.pages.shape[2:])
+    )
+    pool.pages = pool.pages.at[:, table[0]].set(want[None])
+    pool.free(0)
+    assert cache.release_pages(1) == 1      # spill
+    assert pool.free_pages == pool.num_pages
+    m = cache.lock_prefix([3, 1, 4, 1, 9])  # restore
+    np.testing.assert_array_equal(
+        np.asarray(pool.pages[0, m.full_pages[0]]), want
+    )
+
+
+# ======================================================================
+# engine integration
+# ======================================================================
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("gpt-paper").reduced().with_(dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _serve_staggered(cfg, params, prompts, *, prefix_cache, **kw):
+    """First request drains alone (so its prefix lands in the cache), the
+    rest run concurrently — the staggered shared-prefix request set."""
+    eng = PagedServeEngine(
+        cfg, params, max_seqs=3, max_len=64, page_size=4,
+        prefix_cache=prefix_cache, **kw,
+    )
+    eng.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=5))
+    eng.run()
+    for i, p in enumerate(prompts[1:], 1):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=5))
+    eng.run()
+    return eng, {r.rid: r.generated for r in eng.finished}
+
+
+def test_engine_token_exact_with_prefix_cache(setup):
+    """Acceptance: greedy outputs are token-exact with the cache on vs off
+    on a staggered shared-prefix set, including a mid-page divergence that
+    exercises COW."""
+    cfg, params = setup
+    shared = [7, 3, 9, 1, 4, 4, 8, 2, 6, 5]
+    prompts = [
+        shared + [11, 12],        # the cached original
+        shared + [11, 13],        # diverges mid-page (COW)
+        shared[:5] + [9, 9, 9],   # diverges mid-block earlier (COW)
+        shared + [11, 12, 14],    # extends the full cached prompt
+    ]
+    _, off = _serve_staggered(cfg, params, prompts, prefix_cache=False)
+    before = stats.snapshot()
+    eng, on = _serve_staggered(cfg, params, prompts, prefix_cache=True)
+    d = stats.delta(before)
+    assert on == off
+    assert d["prefix_hits"] == 3
+    assert d["cow_copies"] == 2
+    assert d["prefix_tokens_reused"] == 11 + 5 + 12
+    assert eng.sched_stats["prefix_hits"] == 3
+    eng.pool.check_invariants()
+    eng.prefix_cache.check_invariants()
+    # drain completely: cache flush returns every page; zero leaks
+    eng.prefix_cache.flush()
+    assert eng.pool.free_pages == eng.pool.num_pages
+    assert eng.pool.alloc_events == eng.pool.free_events
+
+
+def test_engine_spill_restore_roundtrip_under_pressure(setup):
+    """Acceptance: pool pressure spills cached pages to host; a later
+    shared-prefix request restores them.  Counter-asserted end to end with
+    zero page leaks."""
+    cfg, params = setup
+    shared = list(range(1, 21))                     # 20 tokens, 3 pages @ 8
+    unique = [2] * 20                               # no prefix overlap
+    eng = PagedServeEngine(
+        cfg, params, max_seqs=2, max_len=32, page_size=8, num_pages=5,
+        prefix_cache=True, spill_pages=4,
+    )
+    before = stats.snapshot()
+    seq = [
+        Request(rid=0, prompt=list(shared), max_new_tokens=4),
+        Request(rid=1, prompt=list(shared), max_new_tokens=4),
+        # pressure filler: un-cached one-off; pool of 5 can't fit its 3
+        # pages next to the 3 cached ones without spilling
+        Request(rid=2, prompt=unique, max_new_tokens=4, cache_prefix=False),
+        Request(rid=3, prompt=list(shared), max_new_tokens=4),
+    ]
+    for r in seq:
+        eng.submit(r)
+        eng.run()                                   # sequential drain
+    d = stats.delta(before)
+    assert all(r.done for r in seq)
+    assert d["prefix_hits"] == 2                    # rid 1 and rid 3
+    assert d["cow_copies"] == 2
+    assert d["pages_spilled"] == d["pages_restored"] > 0
+    assert eng.sched_stats["spill_retries"] > 0
+    assert eng.sched_stats["admission_refusals"] == 0
+    eng.pool.check_invariants()
+    eng.prefix_cache.check_invariants()
+    # rid 1 and 3 saw the identical prompt: identical greedy continuations
+    assert seq[1].generated == seq[3].generated == seq[0].generated
+    # zero page leaks once the cache is flushed
+    eng.prefix_cache.flush()
+    assert eng.pool.free_pages == eng.pool.num_pages
+    assert eng.pool.spilled_pages == 0
+    assert eng.pool.alloc_events == eng.pool.free_events
+
+
+def test_engine_prefill_skip_shortens_work(setup):
+    """A matched admission must start prefill at the divergence point —
+    observable as fewer prefill chunks for the second identical request."""
+    cfg, params = setup
+    prompt = list(range(2, 26))                     # 24 tokens
+    eng = PagedServeEngine(
+        cfg, params, max_seqs=2, max_len=64, page_size=8, prefill_chunk=8,
+        prefix_cache=True,
+    )
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=2))
+    eng.run()
+    before = stats.snapshot()
+    eng.submit(Request(rid=1, prompt=prompt, max_new_tokens=2))
+    eng.run()
+    d = stats.delta(before)
+    # 23 of 24 tokens reused -> a single 1-token prefill chunk
+    assert d["prefix_tokens_reused"] == 23
+    assert d["prefill_chunks"] == 1
+
+
+def test_engine_cache_prefix_opt_out(setup):
+    cfg, params = setup
+    eng = PagedServeEngine(
+        cfg, params, max_seqs=2, max_len=64, page_size=8, prefix_cache=True,
+    )
+    prompt = list(range(3, 19))
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=2,
+                       cache_prefix=False))
+    eng.run()
+    assert eng.prefix_cache.stats()["nodes"] == 0
+    # ... but opted-out requests may still *match* previously cached work
+    eng.submit(Request(rid=1, prompt=prompt, max_new_tokens=2))
+    eng.run()
+    eng.submit(Request(rid=2, prompt=prompt, max_new_tokens=2,
+                       cache_prefix=False))
+    eng.run()
+    assert eng.sched_stats["prefix_hits"] == 1
+    assert eng.prefix_cache.stats()["nodes"] > 0
+
+
+def test_spill_requires_prefix_cache(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError):
+        PagedServeEngine(cfg, params, spill_pages=2)
+
+
+def test_admission_retry_drop_path_without_spill(setup):
+    """With no spill tier, pressure falls back to dropping cached leaves —
+    admission still succeeds instead of refusing."""
+    cfg, params = setup
+    eng = PagedServeEngine(
+        cfg, params, max_seqs=2, max_len=32, page_size=8, num_pages=5,
+        prefix_cache=True,
+    )
+    before = stats.snapshot()
+    eng.submit(Request(rid=0, prompt=list(range(1, 21)), max_new_tokens=4))
+    eng.run()
+    eng.submit(Request(rid=1, prompt=[2] * 20,
+                       max_new_tokens=4, cache_prefix=False))
+    eng.run()
+    d = stats.delta(before)
+    assert len(eng.finished) == 2
+    assert d["pages_spilled"] == 0
+    assert d["admission_refusals"] == 0
+    assert eng.sched_stats["spill_retries"] > 0
+    assert eng.prefix_cache.stats()["dropped_nodes"] > 0

@@ -44,6 +44,7 @@ SUITES = {
 
 BASELINE_BENCH = str(Path(__file__).resolve().parent / "BENCH_codegen.json")
 BASELINE_SERVING = str(Path(__file__).resolve().parent / "BENCH_serving.json")
+BASELINE_KERNELS = str(Path(__file__).resolve().parent / "BENCH_kernels.json")
 
 
 def smoke(rows) -> None:
@@ -84,19 +85,27 @@ def main() -> None:
     ap.add_argument("--bench-check", action="store_true",
                     help="assert trace_calls/search_passes of the lowering"
                          " backend do not regress vs the committed"
-                         " benchmarks/BENCH_codegen.json, and the paged"
-                         " serving counters vs BENCH_serving.json (CI gate;"
-                         " implies both benchmarks)")
+                         " benchmarks/BENCH_codegen.json, the paged"
+                         " serving counters vs BENCH_serving.json, and the"
+                         " kernel autotune/computed-mask invariants vs"
+                         " BENCH_kernels.json (CI gate; implies all three"
+                         " benchmarks)")
     ap.add_argument("--serving-bench-out", type=str, default=None,
                     help="write the paged-vs-fixed-slot serving benchmark"
                          " JSON (TTFT, decode tok/s, peak pages, padded-KV"
                          " bytes saved) to this path")
+    ap.add_argument("--kernel-bench-out", type=str, default=None,
+                    help="write the kernel autotune + computed-mask"
+                         " benchmark JSON (estimator peaks computed-vs-bool"
+                         " per length, tuned-vs-default runtime, warm-replay"
+                         " autotune counters) to this path")
     args = ap.parse_args()
     from . import common
 
     if args.plan_cache:
         common.set_plan_cache(args.plan_cache)
-    if args.bench_out or args.bench_check or args.serving_bench_out:
+    if (args.bench_out or args.bench_check or args.serving_bench_out
+            or args.kernel_bench_out):
         import json
 
         problems = []
@@ -120,13 +129,24 @@ def main() -> None:
             if args.bench_check:
                 srv_base = json.loads(Path(BASELINE_SERVING).read_text())
                 problems += serving_bench.check_against(srv_base, fresh_srv)
+        if args.kernel_bench_out or args.bench_check:
+            fresh_k = vs_fused_kernel.run_kernel_bench()
+            print(json.dumps(fresh_k, indent=2))
+            if args.kernel_bench_out:
+                Path(args.kernel_bench_out).write_text(
+                    json.dumps(fresh_k, indent=2) + "\n"
+                )
+            if args.bench_check:
+                k_base = json.loads(Path(BASELINE_KERNELS).read_text())
+                problems += vs_fused_kernel.check_against(k_base, fresh_k)
         if args.bench_check:
             for p in problems:
                 print(f"# BENCH REGRESSION: {p}", file=sys.stderr)
             if problems:
                 sys.exit(1)
-            print("# bench check ok: codegen counts and paged serving"
-                  " counters within baseline", file=sys.stderr)
+            print("# bench check ok: codegen counts, paged serving"
+                  " counters, and kernel autotune/computed-mask invariants"
+                  " within baseline", file=sys.stderr)
         return
     if args.smoke:
         names = ["smoke"]

@@ -4,10 +4,23 @@ The fused baseline is Rabe–Staats attention (lax.scan online softmax over KV
 blocks) — the same kernel class the paper uses.  Even with attention memory
 removed, the FFN/projection activations still dominate at long sequence;
 AutoChunk must remove >70% of the remaining activation memory at ~5% speed
-loss."""
+loss.
+
+This module also hosts the **kernel autotune + computed-mask benchmark**
+(:func:`run_kernel_bench`): for a causal attention compiled through the
+staged pipeline it records, per sequence length, the estimator peak under
+``mask_mode='auto'`` (position-computed mask, the mask input pruned from
+the chunk loop) vs ``mask_mode='bool'`` (the (S, S) boolean array
+materialized and sliced), plus — at the longest length — tuned-vs-default
+runtime, the winning :class:`~repro.kernels.autotune.KernelTuning`, and a
+warm plan-cache replay proving ``autotune_passes == 0``.  The committed
+``benchmarks/BENCH_kernels.json`` snapshot is gated by
+``benchmarks.run --bench-check`` via :func:`check_against`."""
 from __future__ import annotations
 
 import math
+import tempfile
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -97,3 +110,264 @@ def run(csv_rows, seq=1024):
          f"speed={100*t_fused/t_both:.1f}%")
     )
     return csv_rows
+
+
+# ---------------------------------------------------------------------------
+# kernel autotune + computed-mask benchmark (BENCH_kernels.json)
+
+KERNEL_LENGTHS = (128, 256, 512)
+_KB, _KH, _KHD = 1, 4, 64
+_KBUDGET = 0.3
+
+
+def _kernel_attn(S):
+    from repro.models import layers as L
+
+    def attn(qkv):
+        q, k, v = qkv
+        pos = jnp.arange(S)
+        return L.gqa_attention(q, k, v, q_pos=pos, kv_pos=pos, causal=True)
+
+    return attn
+
+
+def _kernel_qkv(S, key=0):
+    k0 = jax.random.PRNGKey(key)
+    shape = (_KB, S, _KH, _KHD)
+    return (
+        jax.random.normal(k0, shape),
+        jax.random.normal(jax.random.fold_in(k0, 1), shape),
+        jax.random.normal(jax.random.fold_in(k0, 2), shape),
+    )
+
+
+def _kernel_compile(S, *, mask_mode="auto", autotune="off", cache=None):
+    from repro.core import ChunkConfig, autochunk
+
+    cf = autochunk(
+        _kernel_attn(S),
+        ChunkConfig(
+            budget_ratio=_KBUDGET,
+            kernel_dispatch="on",
+            autotune=autotune,
+            mask_mode=mask_mode,
+        ),
+        cache=cache,
+        bucketer=None,
+    )
+    return cf.trace(_kernel_qkv(S)).search().compile()
+
+
+def _bool_mask_arrays(fn, args, min_elems: int) -> int:
+    """Count materialized boolean mask arrays of >= min_elems elements.
+
+    Walks the jaxpr recursively (scan/cond bodies included, where the
+    chunk loop builds its per-chunk ``(c, S)`` mask slabs) but skips
+    everything inside a pallas_call — in-kernel predicates are per-tile
+    and are exactly what the computed-mask path is allowed to build."""
+    count = 0
+
+    def walk(jaxpr, in_pallas):
+        nonlocal count
+        for eqn in jaxpr.eqns:
+            inside = in_pallas or "pallas" in eqn.primitive.name
+            if not inside:
+                for v in eqn.outvars:
+                    aval = getattr(v, "aval", None)
+                    if (
+                        aval is not None
+                        and getattr(aval, "dtype", None) == jnp.bool_
+                        and aval.size >= min_elems
+                    ):
+                        count += 1
+            for sub in eqn.params.values():
+                inner = getattr(sub, "jaxpr", None)
+                if inner is not None and hasattr(inner, "eqns"):
+                    walk(inner, inside)
+                elif hasattr(sub, "eqns"):
+                    walk(sub, inside)
+
+    walk(jax.make_jaxpr(fn)(*args).jaxpr, False)
+    return count
+
+
+def run_kernel_bench() -> Dict:
+    """The ``BENCH_kernels.json`` payload (interpret-friendly sizes)."""
+    import numpy as np
+
+    from repro.core import stats
+    from repro.core.plan import PLAN_FORMAT_VERSION, PlanCache
+    from repro.kernels import autotune as at
+    from repro.kernels import ops
+
+    interpret = bool(ops.interpret_default())
+    peaks: Dict[str, Dict[str, int]] = {}
+    for S in KERNEL_LENGTHS:
+        computed = _kernel_compile(S, mask_mode="auto")
+        boolean = _kernel_compile(S, mask_mode="bool")
+        peaks[str(S)] = {
+            "computed": int(computed.final_peak),
+            "bool": int(boolean.final_peak),
+            "mask_bytes": S * S,  # the (S, S) bool array the pruning kills
+        }
+
+    S = KERNEL_LENGTHS[-1]
+    qkv = _kernel_qkv(S)
+    ref = np.asarray(_kernel_attn(S)(qkv))
+
+    # cold compile with autotune on, through an on-disk plan cache ...
+    with tempfile.TemporaryDirectory() as td:
+        cache = PlanCache(td)
+        at.clear_cache()
+        before = stats.snapshot()
+        tuned = _kernel_compile(S, autotune="on", cache=cache)
+        cold = stats.delta(before)
+        # ... then a fresh ChunkedFunction replays the stored v4 plan: the
+        # persisted tuning is restored, never re-searched (the acceptance
+        # counter: autotune_passes stays 0 on the warm path)
+        at.clear_cache()
+        before = stats.snapshot()
+        _kernel_compile(S, autotune="on", cache=cache)
+        warm = stats.delta(before)
+
+    default = _kernel_compile(S, autotune="off")
+    max_err = float(np.max(np.abs(np.asarray(tuned.fn(qkv)) - ref)))
+    t_tuned = time_fn(tuned.fn, qkv, iters=3, warmup=1)
+    t_default = time_fn(default.fn, qkv, iters=3, warmup=1)
+
+    # any bool array of >= S elements is at least one mask row: the
+    # computed path must materialize none, anywhere outside a kernel
+    boolean = _kernel_compile(S, mask_mode="bool")
+    mask_arrays = {
+        "computed": _bool_mask_arrays(tuned.fn, (qkv,), S),
+        "bool": _bool_mask_arrays(boolean.fn, (qkv,), S),
+    }
+
+    return {
+        "plan_format": PLAN_FORMAT_VERSION,
+        "interpret": interpret,
+        "config": {
+            "b": _KB, "h": _KH, "hd": _KHD,
+            "lengths": list(KERNEL_LENGTHS), "budget_ratio": _KBUDGET,
+        },
+        "peaks": peaks,
+        "longest": {
+            "seq": S,
+            "tuned_us": round(t_tuned, 1),
+            "default_us": round(t_default, 1),
+            "tuned_speedup": round(t_default / max(t_tuned, 1e-9), 3),
+            "tuning": tuned.result.tuning,
+            "max_err": max_err,
+            "bool_mask_arrays": mask_arrays,
+            "cold": {
+                "autotune_passes": cold["autotune_passes"],
+                "autotune_trials": cold["autotune_trials"],
+                "computed_mask_hits": cold["kernel_dispatch_computed_mask"],
+            },
+            "warm": {
+                "autotune_passes": warm["autotune_passes"],
+                "autotune_trials": warm["autotune_trials"],
+                "plan_cache_hits": warm["plan_cache_hits"],
+            },
+        },
+    }
+
+
+def check_against(baseline: Dict, fresh: Dict) -> list:
+    """CI gates for the kernels leg of ``benchmarks.run --bench-check``.
+
+    * plan schema drift fails loudly (both vs the library version and vs
+      the committed baseline snapshot);
+    * the computed-mask estimator peak is strictly below the boolean-mask
+      peak at the longest length, and grows sub-quadratically (doubling S
+      must not ~4x the peak — the mask term is gone);
+    * the traced computed-mask executable materializes NO boolean mask
+      array at all outside kernels (while the boolean path provably
+      builds its per-chunk mask slabs — detector sanity);
+    * a cold compile autotunes (>= 1 pass), the warm plan-cache replay
+      does not (autotune_passes == 0);
+    * tuned runtime does not regress vs default tiles (tolerance is loose
+      under interpret mode, where the analytic cost model picks tiles and
+      wall time is emulation noise).
+    """
+    from repro.core.plan import PLAN_FORMAT_VERSION
+
+    problems = []
+    if fresh["plan_format"] != PLAN_FORMAT_VERSION:
+        problems.append(
+            f"plan schema drift: bench ran v{fresh['plan_format']},"
+            f" library is v{PLAN_FORMAT_VERSION}"
+        )
+    if baseline.get("plan_format") != fresh["plan_format"]:
+        problems.append(
+            f"BENCH_kernels.json is v{baseline.get('plan_format')} but the"
+            f" bench produced v{fresh['plan_format']}: regenerate the"
+            " baseline (benchmarks.run --kernel-bench-out)"
+        )
+    longest = fresh["longest"]
+    S = longest["seq"]
+    peak = fresh["peaks"][str(S)]
+    if peak["computed"] >= peak["bool"]:
+        problems.append(
+            f"computed-mask peak {peak['computed']} not strictly below"
+            f" boolean-mask peak {peak['bool']} at S={S}"
+        )
+    half = fresh["peaks"].get(str(S // 2))
+    if half is not None and peak["computed"] > 3 * half["computed"]:
+        problems.append(
+            f"computed-mask peak is not flat in S^2: S={S // 2} ->"
+            f" S={S} grew x{peak['computed'] / half['computed']:.2f}"
+            " (quadratic mask memory is back)"
+        )
+    if longest["bool_mask_arrays"]["computed"] != 0:
+        problems.append(
+            "computed-mask executable still materializes"
+            f" {longest['bool_mask_arrays']['computed']} boolean mask"
+            " arrays outside kernels"
+        )
+    if longest["bool_mask_arrays"]["bool"] < 1:
+        problems.append(
+            "boolean-mask executable shows no materialized mask array —"
+            " the mask detector is broken"
+        )
+    if longest["cold"]["autotune_passes"] < 1:
+        problems.append("cold compile ran no autotune pass")
+    if longest["cold"]["computed_mask_hits"] < 1:
+        problems.append("cold compile dispatched no computed-mask kernel")
+    if longest["warm"]["autotune_passes"] != 0:
+        problems.append(
+            "warm plan-cache replay re-ran the autotuner"
+            f" ({longest['warm']['autotune_passes']} passes, expected 0)"
+        )
+    if longest["warm"]["plan_cache_hits"] < 1:
+        problems.append("warm replay did not hit the plan cache")
+    tol = 1.5 if fresh["interpret"] else 1.05
+    if longest["tuned_us"] > longest["default_us"] * tol:
+        problems.append(
+            f"tuned kernels slower than default tiles: {longest['tuned_us']}"
+            f"us vs {longest['default_us']}us (tol x{tol})"
+        )
+    base_peak = baseline.get("peaks", {}).get(str(S), {}).get("computed")
+    if base_peak is not None and peak["computed"] > base_peak * 1.05:
+        problems.append(
+            f"computed-mask peak regressed: {peak['computed']} >"
+            f" baseline {base_peak} (+5% tol)"
+        )
+    return problems
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench-out", type=str, default=None,
+                    help="write the kernel autotune/computed-mask JSON"
+                         " report to this path")
+    cli = ap.parse_args()
+    report = run_kernel_bench()
+    print(json.dumps(report, indent=2))
+    if cli.bench_out:
+        from pathlib import Path
+
+        Path(cli.bench_out).write_text(json.dumps(report, indent=2) + "\n")

@@ -130,6 +130,7 @@ def build_fn_from_plan(
     rescale: bool = False,
     record: List = None,
     kernel_dispatch: bool = False,
+    mask_mode: str = "auto",
 ):
     """Fast path: apply a saved :class:`~repro.core.plan.ChunkPlan` directly.
 
@@ -148,7 +149,9 @@ def build_fn_from_plan(
     ``record`` is a list, one ``(graph, candidate, n_chunks)`` triple per
     applied stage is appended — callers use it to re-serialize the plan at
     the shapes it actually ran at.  ``kernel_dispatch=True`` runs the fused
-    Pallas kernel dispatch pass on the rewritten graph before emission.
+    Pallas kernel dispatch pass on the rewritten graph before emission,
+    restoring the plan's persisted ``tuning`` (schema v4) instead of
+    re-running the autotuner; ``mask_mode`` is the config's mask knob.
 
     Returns ``(final_flat_fn, final_graph, final_profile)``.
     """
@@ -181,7 +184,14 @@ def build_fn_from_plan(
     if kernel_dispatch:
         from .kernel_dispatch import dispatch_graph
 
-        dispatch_graph(g)
+        # a v4 plan carries the autotuned tuning: pass it straight back in
+        # (never re-tune on the warm path — autotune_passes stays 0)
+        tuning = None
+        if getattr(plan, "tuning", None):
+            from ..kernels.autotune import KernelTuning
+
+            tuning = KernelTuning.from_dict(plan.tuning)
+        g, _ = dispatch_graph(g, tuning=tuning, mask_mode=mask_mode)
     fn = emit(g)
     try:
         gv, _ = trace(fn, flat_args, weight_argnums=weight_argnums)

@@ -59,6 +59,17 @@ class ChunkConfig:
                         ``'auto'`` (dispatch on TPU, scan codegen elsewhere),
                         ``'on'`` (always dispatch — interpret mode on CPU),
                         ``'off'`` (always scan codegen)
+    ``autotune``        kernel autotune pass on cold compiles (tile sizes,
+                        DMA buffer depth — persisted in the v4 plan):
+                        ``'auto'`` follows ``kernel_dispatch``, ``'on'`` /
+                        ``'off'`` force it.  Warm replays restore the stored
+                        tuning and never re-tune.
+    ``mask_mode``       attention-mask lowering for dispatched kernels:
+                        ``'auto'`` classifies causal/sliding-window masks
+                        and computes them from positions inside the kernel
+                        (no (Sq,Skv) bool array), falling back to the
+                        boolean-mask kernel for arbitrary masks; ``'bool'``
+                        forces the boolean path (debug/benchmark)
     ``canonical_bucket_exec``
                         compile ONE executable per shape bucket, at the
                         bucket's canonical (boundary) shape, and serve every
@@ -90,6 +101,8 @@ class ChunkConfig:
     dim_blocklist: Tuple[int, ...] = ()
     anneal: int = 2
     kernel_dispatch: str = "auto"
+    autotune: str = "auto"
+    mask_mode: str = "auto"
     canonical_bucket_exec: bool = False
     cache_max_entries: Optional[int] = None
     cache_policy: str = "lru"
@@ -123,6 +136,14 @@ class ChunkConfig:
             raise ValueError(
                 "kernel_dispatch must be 'auto', 'on', or 'off',"
                 f" got {self.kernel_dispatch!r}"
+            )
+        if self.autotune not in ("auto", "on", "off"):
+            raise ValueError(
+                f"autotune must be 'auto', 'on', or 'off', got {self.autotune!r}"
+            )
+        if self.mask_mode not in ("auto", "bool"):
+            raise ValueError(
+                f"mask_mode must be 'auto' or 'bool', got {self.mask_mode!r}"
             )
         from .plan import PlanCache
 
@@ -189,6 +210,8 @@ class ChunkConfig:
             "dim_blocklist": sorted(self.dim_blocklist),
             "anneal": self.anneal,
             "kernel_dispatch": self.resolve_kernel_dispatch(),
+            "autotune": self.resolve_autotune(),
+            "mask_mode": self.mask_mode,
         }
 
     def resolve_kernel_dispatch(self) -> bool:
@@ -207,6 +230,22 @@ class ChunkConfig:
         import jax
 
         return jax.default_backend() == "tpu"
+
+    def resolve_autotune(self) -> bool:
+        """Whether the kernel autotune pass runs on a cold compile.
+
+        ``'auto'`` follows :meth:`resolve_kernel_dispatch` — tuning only
+        makes sense where dispatched kernels actually run.  The resolved
+        value feeds the cache key: a plan carrying measured-on-TPU tuning is
+        not replayed by an untuned consumer and vice versa.  Warm replays
+        never re-tune regardless of this knob — they restore the persisted
+        ``KernelTuning`` from the plan.
+        """
+        if self.autotune == "on":
+            return True
+        if self.autotune == "off":
+            return False
+        return self.resolve_kernel_dispatch()
 
     def to_dict(self) -> Dict[str, Any]:
         d = asdict(self)
@@ -242,6 +281,7 @@ class ChunkConfig:
         """
         d = self.to_dict()
         d["kernel_dispatch"] = self.resolve_kernel_dispatch()
+        d["autotune"] = self.resolve_autotune()
         blob = json.dumps(d, sort_keys=True, separators=(",", ":"))
         return hashlib.sha256(blob.encode()).hexdigest()
 

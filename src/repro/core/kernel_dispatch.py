@@ -10,10 +10,14 @@ are pattern-matched against two shapes the fused Pallas kernels in
 * **softmax attention** — ``dot_general -> (scale/mask/transpose) ->
   softmax -> dot_general``, any operand order / GQA grouping / batch
   layout, with an arbitrary boolean mask (causal, sliding-window,
-  padding...).  Dispatched onto :func:`repro.kernels.ops.masked_attention`:
-  the per-chunk ``(c, Skv)`` logits never materialize in HBM; the mask
-  tensor is streamed through VMEM blocks alongside K/V, so equivalence
-  holds for *any* mask rather than only recognized causal patterns.
+  padding...).  When the mask resolves to a *constant band* — causal and
+  sliding-window masks constant-fold into const bool arrays at trace time —
+  the site dispatches onto :func:`repro.kernels.ops.computed_attention`:
+  the predicate is recomputed from block indices inside the kernel, no
+  ``(Sq, Skv)`` mask array exists at any level, and fully-masked kv blocks
+  are skipped via ``pl.when``.  Arbitrary masks keep
+  :func:`repro.kernels.ops.masked_attention`, which streams the mask
+  through VMEM blocks alongside K/V.
 * **SwiGLU FFN** — ``dot -> split -> silu -> mul -> dot`` (fused ``w_in``)
   or ``dot/dot -> silu -> mul -> dot`` (separate gate/up weights).
   Dispatched onto :func:`repro.kernels.ops.swiglu_ffn`: the ``(c, d_ff)``
@@ -24,10 +28,19 @@ A match replaces the interior equations with one
 stays — graph-level chunking and kernel-level tiling compose); non-matching
 bodies keep the generic scan codegen.  ``annotate_candidates`` runs the
 same matcher during chunk *selection* so kernelizable candidates charge the
-VMEM-tile body peak instead of the full chunk-slice peak.
+VMEM-tile body peak instead of the full chunk-slice peak — and
+computed-mask candidates stop charging mask bytes entirely.
 
-Counters: ``kernel_dispatch_hits`` / ``kernel_dispatch_misses`` in
-``core.stats`` make dispatch coverage observable in serve logs.
+``dispatch_graph`` also hosts the autotune hook: with ``autotune=True`` it
+collects the matched kernel sites' shapes and runs
+:func:`repro.kernels.autotune.tune_sites` once, then threads the winning
+tile sizes / DMA buffer depth into every builder.  The caller persists the
+returned :class:`~repro.kernels.autotune.KernelTuning` in the plan (schema
+v4) so warm replays skip the pass (``autotune_passes == 0``).
+
+Counters: ``kernel_dispatch_hits`` / ``kernel_dispatch_misses`` /
+``kernel_dispatch_computed_mask`` in ``core.stats`` make dispatch coverage
+observable in serve logs.
 """
 from __future__ import annotations
 
@@ -36,10 +49,12 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax.numpy as jnp
+import numpy as np
 
 from . import stats
 from .graph import Graph, Var, is_var
 from .lowering import (
+    LOOP_INDEX,
     ChunkLoopEqn,
     KernelDispatch,
     is_chunk_loop,
@@ -50,10 +65,16 @@ from .search import ChunkCandidate
 
 _PASS = ("convert_element_type", "stop_gradient")
 
-# VMEM block caps used by the dispatch targets (see kernels.ops): the
+# Default VMEM block caps of the dispatch targets (see kernels.ops): the
 # dispatch-aware cost model charges these tiles instead of chunk slices.
+# Autotuning may shrink/grow the runtime blocks; the selection-time model
+# keeps the defaults (selection happens before tuning runs).
 _BLOCK = 128
 _BLOCK_F = 512
+
+# tuning kwargs each ops wrapper accepts (KernelTuning.kernel_kwargs keys)
+_ATTN_TILE = ("block_q", "block_kv", "buffer_depth")
+_FFN_TILE = ("block_s", "block_f", "buffer_depth")
 
 
 @dataclass
@@ -68,6 +89,10 @@ class _BodyCtx:
     # producers of vars defined OUTSIDE the body (prefix/hoisted equations):
     # followed read-only, e.g. to resolve a hoisted -1e30 mask constant
     outer: Dict[Var, Any] = field(default_factory=dict)
+    # the graph's const bindings: masks built from concrete positions
+    # (jnp.arange/tril comparisons) constant-fold at trace time and land
+    # here — the computed-mask classifier reads them directly
+    consts: Dict[Var, Any] = field(default_factory=dict)
 
     def __post_init__(self):
         for i, eqn in enumerate(self.eqns):
@@ -98,6 +123,7 @@ def _ctx_from_node(
         escapes=set(node.outvars),
         var_dim=dict(node.params["var_dim"]),
         outer=_outer_producers(g) if outer is None else outer,
+        consts=g.consts if g is not None else {},
     )
 
 
@@ -114,6 +140,7 @@ def _ctx_from_candidate(g: Graph, cand: ChunkCandidate, outer=None) -> _BodyCtx:
     return _BodyCtx(
         eqns=eqns, escapes=escapes, var_dim=dict(cand.var_dim),
         outer=_outer_producers(g) if outer is None else outer,
+        consts=g.consts,
     )
 
 
@@ -126,8 +153,11 @@ class Match:
     at: int                     # body position of the root eqn
     root: Var
     reads: Tuple[Var, ...]
-    builder: Any                # fn(env) -> value for root
+    builder: Any                # fn(env, kw) -> value for root
     tile_bytes: int
+    # site shapes for the autotuner + bookkeeping (mask variant, which
+    # shape fields are chunk-scaled)
+    meta: Dict[str, Any] = field(default_factory=dict)
 
 
 # ---------------------------------------------------------------------------
@@ -177,6 +207,117 @@ def _is_neg_const(ctx: _BodyCtx, atom) -> bool:
     return v is not None and v <= -1e15
 
 
+# prims whose full-shape value is row/col-consistent with the chunked
+# runtime value (elementwise + structural ops that never *generate*
+# positions — an in-body iota would count 0..c-1 per chunk while the
+# full-shape eval counts 0..S-1, so position generators are only trusted
+# from OUTER producers, whose params are never chunk-adjusted)
+_MASK_EVAL_ANY = frozenset({
+    "broadcast_in_dim", "convert_element_type", "stop_gradient",
+    "transpose", "not", "and", "or", "xor",
+    "le", "lt", "ge", "gt", "eq", "ne",
+    "add", "sub", "mul", "min", "max",
+})
+_MASK_EVAL_OUTER = _MASK_EVAL_ANY | {"iota", "reshape"}
+_MASK_EVAL_LIMIT = 1 << 26  # elements per intermediate (64M = 8192^2)
+
+_NP_BINOPS = {
+    "le": np.less_equal, "lt": np.less, "ge": np.greater_equal,
+    "gt": np.greater, "eq": np.equal, "ne": np.not_equal,
+    "add": np.add, "sub": np.subtract, "mul": np.multiply,
+    "min": np.minimum, "max": np.maximum,
+    "and": np.logical_and, "or": np.logical_or, "xor": np.logical_xor,
+}
+
+
+def _concrete_mask_value(ctx: _BodyCtx, v, depth: int = 0) -> Optional[np.ndarray]:
+    """Concrete FULL-shape value behind a mask var, or None.
+
+    Position masks are built from ``jnp.arange`` comparisons: the arange is
+    an ``iota`` equation in the graph (usually outside the loop, its output
+    sliced in) and the comparison chain sits in the body.  This evaluates
+    that chain with numpy at the vars' *aval* shapes — avals are never
+    chunk-adjusted, so the result is the full (Sq, Skv) mask even when the
+    body's eqn params were shrunk to chunk size.  Anything outside the
+    whitelisted position algebra (gathers, data-dependent masks...) returns
+    None and keeps the boolean-mask kernel.
+    """
+    if not is_var(v):
+        val = getattr(v, "val", None)
+        return np.asarray(val) if val is not None else None
+    if v in ctx.consts:
+        return np.asarray(ctx.consts[v])
+    if depth > 24:
+        return None
+    shape = tuple(v.aval.shape)
+    if _prod(shape) > _MASK_EVAL_LIMIT:
+        return None
+    i = ctx.producer.get(v)
+    if i is not None:
+        e, allowed = ctx.eqns[i], _MASK_EVAL_ANY
+    else:
+        e, allowed = ctx.outer.get(v), _MASK_EVAL_OUTER
+    if e is None:
+        return None
+    nm = e.primitive.name
+    if nm not in allowed:
+        return None
+    if nm == "iota":
+        dim = int(e.params["dimension"])
+        base = np.arange(shape[dim], dtype=np.dtype(v.aval.dtype))
+        base = base.reshape(
+            [shape[dim] if d == dim else 1 for d in range(len(shape))]
+        )
+        return np.broadcast_to(base, shape)
+    ins = [_concrete_mask_value(ctx, iv, depth + 1) for iv in e.invars]
+    if any(x is None for x in ins):
+        return None
+    if nm == "broadcast_in_dim":
+        bd = e.params["broadcast_dimensions"]
+        news = [1] * len(shape)
+        for j, d in enumerate(bd):
+            news[d] = ins[0].shape[j]
+        return np.broadcast_to(ins[0].reshape(news), shape)
+    if nm == "transpose":
+        return np.transpose(ins[0], e.params["permutation"])
+    if nm == "reshape":
+        return ins[0].reshape(shape)
+    if nm in ("convert_element_type", "stop_gradient"):
+        return ins[0].astype(np.dtype(v.aval.dtype))
+    if nm == "not":
+        return np.logical_not(ins[0])
+    op = _NP_BINOPS.get(nm)
+    if op is None or len(ins) != 2:
+        return None
+    return op(ins[0], ins[1])
+
+
+def _band_params(mask: np.ndarray) -> Optional[Tuple[int, int]]:
+    """(U, L) such that mask[a, j] == (j - a <= U) and (a - j <= L).
+
+    Exact-reconstruction check: anything that is not a contiguous
+    causal/sliding-window band (padding masks, block-sparse patterns)
+    returns None and keeps the boolean-mask kernel.
+    """
+    sq, skv = mask.shape
+    counts = mask.sum(axis=1)
+    if (counts == 0).any():
+        return None
+    idx = np.arange(sq)
+    first = mask.argmax(axis=1)
+    last = skv - 1 - mask[:, ::-1].argmax(axis=1)
+    if not (counts == last - first + 1).all():
+        return None  # a row with holes is not a band
+    u = int((last - idx).max())
+    low = int((idx - first).max())
+    if not (
+        (first == np.maximum(idx - low, 0)).all()
+        and (last == np.minimum(idx + u, skv - 1)).all()
+    ):
+        return None
+    return u, low
+
+
 def _interior_is_private(ctx: _BodyCtx, interior: Set[int], at: int) -> bool:
     """No interior intermediate may be read outside the match."""
     for i in interior:
@@ -196,11 +337,17 @@ def _prod(xs) -> int:
     return int(math.prod(xs)) if xs else 1
 
 
+def _tile_kwargs(kw: Dict[str, Any], keys: Tuple[str, ...]) -> Dict[str, Any]:
+    return {k: kw[k] for k in keys if k in kw}
+
+
 # ---------------------------------------------------------------------------
 # Attention matcher
 # ---------------------------------------------------------------------------
 
-def _try_attention(ctx: _BodyCtx, i_div: int) -> Optional[Match]:
+def _try_attention(
+    ctx: _BodyCtx, i_div: int, mask_mode: str = "auto"
+) -> Optional[Match]:
     eqns = ctx.eqns
     div = eqns[i_div]
     num, den = div.invars
@@ -472,11 +619,11 @@ def _try_attention(ctx: _BodyCtx, i_div: int) -> Optional[Match]:
             continue
         break
     if len(m_map) == 2 and set(m_map) == {q_out, kv_out}:
-        mask_mode = "2d"
+        mask_shape = "2d"
         mask_flip = m_map[0] == kv_out
         mask_perm = None
     else:
-        mask_mode = "full"
+        mask_shape = "full"
         mask_flip = False
         m_var, m_map = mask_var, list(mask_map)
         targets = (
@@ -500,12 +647,37 @@ def _try_attention(ctx: _BodyCtx, i_div: int) -> Optional[Match]:
     else:
         out_axes = batch_labels + [hdv_canon] + p_labels
 
+    sq_full = int(q_var.aval.shape[dq])
+    skv_full = int(k_var.aval.shape[k_seq])
+    hd_sz = int(q_var.aval.shape[q_contract])
+
+    # --- computed-mask classification --------------------------------------
+    # A 2-D mask whose concrete value is a contiguous band (causal /
+    # sliding-window) is replayed inside the kernel from block indices:
+    # no mask array is read, so the mask drops out of ``reads`` and its
+    # producing chain dies with it.  Requirements: the mask must evaluate
+    # concretely from position algebra (``_concrete_mask_value``), be
+    # chunked along its q axis (each chunk sees rows [i*c, i*c + c) of the
+    # full band — the builder rebuilds the global row offset from the loop
+    # index), and K must not be chunked along kv (column positions must
+    # stay global).
+    band = None
+    if mask_mode != "bool" and mask_shape == "2d":
+        q_axis = m_map.index(q_out)
+        m_chunk = ctx.var_dim.get(m_var)
+        if m_chunk == q_axis and ctx.var_dim.get(k_var) != k_seq:
+            mval = _concrete_mask_value(ctx, m_var)
+            if mval is not None and mval.ndim == 2 and mval.dtype == np.bool_:
+                m2 = mval.T if mask_flip else mval
+                if mask_invert:
+                    m2 = ~m2
+                if m2.shape == (sq_full, skv_full):
+                    band = _band_params(m2)
+
     root_dtype = root.aval.dtype
     scale_f = float(scale)
 
-    def builder(env):
-        from repro.kernels import ops
-
+    def _canon_qkv(env):
         q = jnp.transpose(env[q_var], q_perm)
         k = jnp.transpose(env[k_var], k_perm)
         v = jnp.transpose(env[v_var], v_perm)
@@ -524,27 +696,94 @@ def _try_attention(ctx: _BodyCtx, i_div: int) -> Optional[Match]:
             vf = jnp.broadcast_to(
                 vf[:, None], (nbatch, g, skv, hdv)
             ).reshape(nbatch * g, skv, hdv)
-        m = env[m_var]
-        if mask_invert:
-            m = jnp.logical_not(m)
-        if mask_mode == "2d":
-            mm = (jnp.transpose(m) if mask_flip else m)[None]
-        else:
-            mm = jnp.transpose(m, mask_perm).reshape(-1, cq, skv)
-        out = ops.masked_attention(qf, kf, vf, mm, scale=scale_f)
+        return qf, kf, vf, (bsh, gsh, cq, hdv)
+
+    def _restore(out, shp):
+        bsh, gsh, cq, hdv = shp
         out = out.reshape(tuple(bsh) + tuple(gsh) + (cq, hdv))
         return jnp.transpose(out, out_axes).astype(root_dtype)
 
-    hd_sz = q_var.aval.shape[q_contract]
-    tile = 4 * (_BLOCK * _BLOCK + 3 * _BLOCK * max(hd_sz, 1))
+    if band is not None:
+        band_u, band_l = band
+        causal_flag = band_u < skv_full - 1
+        win = (band_u + band_l + 1) if band_l < sq_full - 1 else None
+
+        def builder(env, kw):
+            from repro.kernels import ops
+
+            qf, kf, vf, shp = _canon_qkv(env)
+            # global kv-coordinate of this chunk's q row 0: the chunk
+            # start (clamped exactly like _slice_chunk clamps the slice)
+            # shifted by the band's upper diagonal
+            c_, ext_ = int(kw["c"]), int(kw["ext"])
+            start = jnp.minimum(
+                jnp.asarray(env[LOOP_INDEX], jnp.int32) * c_, ext_ - c_
+            )
+            out = ops.computed_attention(
+                qf, kf, vf, start + band_u, scale=scale_f,
+                causal=causal_flag, window=win,
+                **_tile_kwargs(kw, _ATTN_TILE),
+            )
+            return _restore(out, shp)
+
+        reads = (q_var, k_var, v_var)
+        # no mask tile: the predicate is registers-only inside the kernel
+        tile = 4 * _BLOCK * _BLOCK + 12 * _BLOCK * max(hd_sz, 1)
+        mask_variant = "computed"
+    else:
+
+        def builder(env, kw):
+            from repro.kernels import ops
+
+            qf, kf, vf, shp = _canon_qkv(env)
+            cq, skv = qf.shape[1], kf.shape[1]
+            m = env[m_var]
+            if mask_invert:
+                m = jnp.logical_not(m)
+            if mask_shape == "2d":
+                mm = (jnp.transpose(m) if mask_flip else m)[None]
+            else:
+                mm = jnp.transpose(m, mask_perm).reshape(-1, cq, skv)
+            out = ops.masked_attention(
+                qf, kf, vf, mm, scale=scale_f,
+                **_tile_kwargs(kw, _ATTN_TILE),
+            )
+            return _restore(out, shp)
+
+        reads = (q_var, k_var, v_var, m_var)
+        # logits tile + streamed bool mask tile + q/k/v rows
+        tile = (
+            4 * _BLOCK * _BLOCK
+            + _BLOCK * _BLOCK
+            + 12 * _BLOCK * max(hd_sz, 1)
+        )
+        mask_variant = "bool"
+
+    n_site = _prod([q_var.aval.shape[d] for d in q_batch]) * _prod(
+        [q_var.aval.shape[d] for d in group_dims]
+    )
+    meta = {
+        "mask": mask_variant,
+        "site": {
+            "kind": "attention", "n": n_site, "sq": sq_full,
+            "skv": skv_full, "hd": hd_sz,
+        },
+        # shape fields that scale with the chunk size (dq is the chunked
+        # dim by construction; kv only when K itself is chunked)
+        "chunk_adjust": dict(
+            [("sq", sq_full)]
+            + ([("skv", skv_full)] if ctx.var_dim.get(k_var) == k_seq else [])
+        ),
+    }
     return Match(
         kind="attention",
         interior=interior,
         at=dg2_i,
         root=root,
-        reads=(q_var, k_var, v_var, m_var),
+        reads=reads,
         builder=builder,
         tile_bytes=tile,
+        meta=meta,
     )
 
 
@@ -664,7 +903,7 @@ def _try_swiglu(ctx: _BodyCtx, i_dg3: int) -> Optional[Match]:
     root_dtype = root.aval.dtype
     reads = tuple({x_var, wg_var, wu_var, wd_var})
 
-    def builder(env):
+    def builder(env, kw):
         from repro.kernels import ops
 
         x = env[x_var]
@@ -677,11 +916,22 @@ def _try_swiglu(ctx: _BodyCtx, i_dg3: int) -> Optional[Match]:
         else:
             wg, wu = env[wg_var], env[wu_var]
         wd = env[wd_var]
-        out = ops.swiglu_ffn(x2, wg, wu, wd)
+        out = ops.swiglu_ffn(x2, wg, wu, wd, **_tile_kwargs(kw, _FFN_TILE))
         return out.reshape(tuple(lead) + (wd.shape[1],)).astype(root_dtype)
 
-    d_sz = x_var.aval.shape[-1]
+    d_sz = int(x_var.aval.shape[-1])
+    if wg_slice is not None:
+        f_sz = int(wg_slice[1] - wg_slice[0])
+    else:
+        f_sz = int(wg_var.aval.shape[1])
+    s_full = _prod(x_var.aval.shape[:-1])
     tile = 4 * (_BLOCK * _BLOCK_F + 2 * _BLOCK * max(d_sz, 1))
+    meta = {
+        "site": {"kind": "swiglu", "s": s_full, "d": d_sz, "f": f_sz},
+        # s is the flattened leading-dim product: it scales by c/extent of
+        # the chunked dim rather than collapsing to c
+        "chunk_adjust": {"s": int(x_var.aval.shape[dx])},
+    }
     return Match(
         kind="swiglu",
         interior=interior,
@@ -690,6 +940,7 @@ def _try_swiglu(ctx: _BodyCtx, i_dg3: int) -> Optional[Match]:
         reads=reads,
         builder=builder,
         tile_bytes=tile,
+        meta=meta,
     )
 
 
@@ -697,7 +948,7 @@ def _try_swiglu(ctx: _BodyCtx, i_dg3: int) -> Optional[Match]:
 # Body matching + the pass entry points
 # ---------------------------------------------------------------------------
 
-def match_body(ctx: _BodyCtx) -> List[Match]:
+def match_body(ctx: _BodyCtx, mask_mode: str = "auto") -> List[Match]:
     """All non-overlapping fused-kernel matches in one loop body."""
     found: List[Match] = []
     used: Set[int] = set()
@@ -705,7 +956,7 @@ def match_body(ctx: _BodyCtx) -> List[Match]:
         name = eqn.primitive.name
         m = None
         if name == "div":
-            m = _try_attention(ctx, i)
+            m = _try_attention(ctx, i, mask_mode)
         elif name == "dot_general":
             m = _try_swiglu(ctx, i)
         if m is None:
@@ -738,11 +989,59 @@ def _dead_after(ctx: _BodyCtx, skip: Set[int], protected: Set[Var]) -> Set[int]:
     return dead
 
 
-def dispatch_node(node: ChunkLoopEqn, g: Optional[Graph] = None, outer=None) -> int:
-    """Try to dispatch one chunk-loop node; returns the number of matches."""
+def _prune_node_inputs(node: ChunkLoopEqn) -> bool:
+    """Drop sliced/captured inputs nothing in the dispatched body reads.
+
+    After a computed-mask dispatch the mask var has no consumers left (its
+    select chain is skipped and it is not in any record's ``reads``):
+    removing it from the node's inputs stops the scan from slicing an
+    O(Sq*Skv) array per iteration — and lets graph-level DCE delete the
+    chain that built it.
+    """
+    p = node.params
+    if not p["dispatches"]:
+        return False
+    skip = set().union(*(d.skip for d in p["dispatches"]))
+    fire = {d.at for d in p["dispatches"]}
+    needed: Set[Var] = set()
+    for i, eqn in enumerate(p["body"]):
+        if i in skip or i in fire:
+            continue
+        needed.update(iv for iv in eqn.invars if is_var(iv))
+    for d in p["dispatches"]:
+        needed.update(d.reads)
+    new_sliced = [sv for sv in p["sliced"] if sv[0] in needed]
+    new_captured = [v for v in p["captured"] if v in needed]
+    if (
+        len(new_sliced) == len(p["sliced"])
+        and len(new_captured) == len(p["captured"])
+    ):
+        return False
+    if not new_sliced:
+        return False  # keep at least one sliced input driving the loop
+    p["sliced"] = new_sliced
+    p["captured"] = new_captured
+    node.invars = [v for v, _ in new_sliced] + list(new_captured)
+    return True
+
+
+def dispatch_node(
+    node: ChunkLoopEqn,
+    g: Optional[Graph] = None,
+    outer=None,
+    *,
+    tuning=None,
+    mask_mode: str = "auto",
+) -> int:
+    """Try to dispatch one chunk-loop node; returns the number of matches.
+
+    ``tuning`` (a :class:`repro.kernels.autotune.KernelTuning`) supplies the
+    tile/buffer kwargs baked into each dispatch record; ``mask_mode='bool'``
+    disables the computed-mask path (every mask streams as a bool array).
+    """
     try:
         ctx = _ctx_from_node(node, g, outer)
-        matches = match_body(ctx)
+        matches = match_body(ctx, mask_mode)
     except Exception:
         # dispatch must never break a compilable plan: an exotic body that
         # trips the matcher falls back to generic scan codegen
@@ -755,56 +1054,171 @@ def dispatch_node(node: ChunkLoopEqn, g: Optional[Graph] = None, outer=None) -> 
     skip0 = {i for m in matches for i in m.interior if i != m.at}
     at_set = {m.at for m in matches}
     skip_all = _dead_after(ctx, skip0 | at_set, protected) - at_set
+    base_kw = {
+        "c": int(node.params["c"]),
+        "ext": int(node.params["chunk_extent"]),
+    }
     records = []
     for j, m in enumerate(matches):
         own = set(m.interior) - {m.at}
         if j == 0:  # fold the globally-dead eqns into the first record
             own |= skip_all - {i for mm in matches for i in mm.interior} - at_set
+        kw = dict(base_kw)
+        if tuning is not None:
+            kw.update(tuning.kernel_kwargs(m.kind))
         records.append(
             KernelDispatch(
                 skip=frozenset(own),
                 at=m.at,
                 root=m.root,
                 reads=tuple(m.reads),
-                fn=m.builder,
+                fn=(lambda env, _b=m.builder, _kw=kw: _b(env, _kw)),
                 kind=m.kind,
             )
         )
-    saved = node.params["dispatches"]
+    saved = (
+        node.params["dispatches"],
+        list(node.params["sliced"]),
+        list(node.params["captured"]),
+        list(node.invars),
+    )
     node.params["dispatches"] = tuple(records)
     try:
         validate_body(node)
+        if _prune_node_inputs(node):
+            validate_body(node)
     except Exception:
         # dispatch must never break a compilable plan: revert to scan codegen
-        node.params["dispatches"] = saved
+        node.params["dispatches"] = saved[0]
+        node.params["sliced"] = saved[1]
+        node.params["captured"] = saved[2]
+        node.invars = saved[3]
         refresh_node(node)
         stats.bump("kernel_dispatch_misses")
         return 0
     refresh_node(node)
     stats.bump("kernel_dispatch_hits", len(records))
+    n_computed = sum(1 for m in matches if m.meta.get("mask") == "computed")
+    if n_computed:
+        stats.bump("kernel_dispatch_computed_mask", n_computed)
     return len(records)
 
 
-def dispatch_graph(g: Graph) -> Graph:
-    """Run kernel dispatch over every chunk-loop node of a rewritten graph."""
+def _node_sites(node: ChunkLoopEqn, matches: Sequence[Match]) -> List[Dict]:
+    """Autotune site descriptors for one node's matches, at chunk shapes."""
+    c = int(node.params["c"])
+    sites: List[Dict] = []
+    for m in matches:
+        site = dict(m.meta.get("site") or {})
+        if not site:
+            continue
+        for fld, ext in (m.meta.get("chunk_adjust") or {}).items():
+            if fld == "s":
+                site["s"] = max(1, (int(site["s"]) // max(int(ext), 1)) * c)
+            else:
+                site[fld] = c
+        sites.append(site)
+    return sites
+
+
+def _prune_graph(g: Graph) -> Graph:
+    """Fixpoint DCE after dispatch.
+
+    Node-input pruning can orphan whole prefix chains — e.g. the eqns that
+    built a boolean mask a computed-mask dispatch no longer reads.  Drops
+    eqns with no remaining consumers (chunk-loop nodes and graph outputs
+    stay) and const bindings nothing references; rebuilding the
+    :class:`Graph` recomputes the producer/consumer indices.
+    """
+    eqns = list(g.eqns)
+    out_set = {v for v in g.outvars if is_var(v)}
+    while True:
+        consumed: Set[Var] = set(out_set)
+        for eqn in eqns:
+            consumed.update(iv for iv in eqn.invars if is_var(iv))
+        keep = [
+            e for e in eqns
+            if is_chunk_loop(e)
+            or any(is_var(ov) and ov in consumed for ov in e.outvars)
+        ]
+        if len(keep) == len(eqns):
+            break
+        eqns = keep
+    consumed = set(out_set)
+    for eqn in eqns:
+        consumed.update(iv for iv in eqn.invars if is_var(iv))
+    consts = {v: val for v, val in g.consts.items() if v in consumed}
+    return Graph(
+        invars=list(g.invars),
+        outvars=list(g.outvars),
+        eqns=eqns,
+        consts=consts,
+        weight_invars=set(g.weight_invars),
+    )
+
+
+def dispatch_graph(
+    g: Graph,
+    *,
+    tuning=None,
+    autotune: bool = False,
+    mask_mode: str = "auto",
+):
+    """Run kernel dispatch over every chunk-loop node of a rewritten graph.
+
+    Returns ``(graph, tuning)``.  With ``autotune=True`` and no ``tuning``
+    given, the matched sites' shapes are collected first and
+    :func:`repro.kernels.autotune.tune_sites` picks the tile sizes / DMA
+    buffer depth baked into the dispatch records; the caller persists the
+    returned tuning in the plan so warm replays pass it back instead
+    (``autotune_passes == 0`` on replay).  The returned graph has dead
+    equations pruned — a computed-mask dispatch leaves the chain that built
+    the boolean mask unconsumed, and this is where it is deleted.
+    """
     outer = _outer_producers(g)
-    for eqn in g.eqns:
-        if is_chunk_loop(eqn):
-            dispatch_node(eqn, g, outer)
-    return g
+    nodes = [e for e in g.eqns if is_chunk_loop(e)]
+    if autotune and tuning is None and nodes:
+        sites: List[Dict] = []
+        for node in nodes:
+            try:
+                ms = match_body(_ctx_from_node(node, g, outer), mask_mode)
+            except Exception:
+                ms = []
+            sites.extend(_node_sites(node, ms))
+        if sites:
+            from ..kernels import autotune as _autotune
+            from ..kernels import ops as _ops
+
+            tuning = _autotune.tune_sites(
+                sites, interpret=_ops.interpret_default()
+            )
+    dispatched = 0
+    for node in nodes:
+        dispatched += dispatch_node(
+            node, g, outer, tuning=tuning, mask_mode=mask_mode
+        )
+    if dispatched:
+        g = _prune_graph(g)
+    return g, tuning
 
 
-def annotate_candidates(g: Graph, cands: Sequence[ChunkCandidate]) -> None:
+def annotate_candidates(
+    g: Graph, cands: Sequence[ChunkCandidate], mask_mode: str = "auto"
+) -> None:
     """Dispatch-aware selection: mark kernelizable candidates.
 
     Sets ``kernel_tile_bytes`` on every candidate whose body matches a fused
     kernel, so the cost model charges the VMEM-tile body peak instead of
     the full chunk-slice peak (see ``ChunkCandidate.chunked_body_peak``).
+    Computed-mask matches charge no mask bytes at all — the predicate
+    never materializes.
     """
     outer = _outer_producers(g)
     for cand in cands:
         try:
-            matches = match_body(_ctx_from_candidate(g, cand, outer))
+            matches = match_body(
+                _ctx_from_candidate(g, cand, outer), mask_mode
+            )
         except Exception:
             continue
         if matches:

@@ -62,6 +62,24 @@ class _ChunkLoopPrimitive:
 CHUNK_LOOP = _ChunkLoopPrimitive()
 
 
+class _LoopIndexSentinel:
+    """Env key under which a chunk loop binds its (traced) iteration index.
+
+    Kernel-dispatch builders that compute masks from absolute positions need
+    the chunk's start offset at runtime; ``benv[LOOP_INDEX]`` is the scan's
+    int32 iteration counter (``validate_body`` binds a zero so dispatched
+    bodies abstract-eval cleanly).
+    """
+
+    __slots__ = ()
+
+    def __repr__(self) -> str:
+        return "<loop_index>"
+
+
+LOOP_INDEX = _LoopIndexSentinel()
+
+
 @dataclass(frozen=True)
 class KernelDispatch:
     """One fused-kernel substitution inside a chunk-loop body.
@@ -178,6 +196,7 @@ def _eval_chunk_loop(node: ChunkLoopEqn, env: Dict[Var, Any]) -> None:
 
     def scan_body(bufs, i):
         benv: Dict[Var, Any] = dict(captured)
+        benv[LOOP_INDEX] = i
         for (v, d), full in zip(sliced, sliced_full):
             benv[v] = _slice_chunk(full, d, i, c)
         _eval_body(p["body"], benv, p["dispatches"])
@@ -312,6 +331,7 @@ def validate_body(node: ChunkLoopEqn) -> None:
 
     def run(*vals):
         benv = dict(zip(order, vals))
+        benv[LOOP_INDEX] = jnp.zeros((), jnp.int32)
         _eval_body(p["body"], benv, p["dispatches"])
         return tuple(benv[v] for v in node.outvars)
 

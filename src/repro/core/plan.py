@@ -52,7 +52,11 @@ from .search import ChunkCandidate
 # re-trace of the previous stage's callable, so their eqn indices and
 # positional var names are incompatible with v2 plans; search knobs gained
 # ``kernel_dispatch``.  v2 plans are rejected on load and recompiled.
-PLAN_FORMAT_VERSION = 3
+# v4: plans carry the autotuned ``KernelTuning`` (``tuning`` field — tile
+# sizes, DMA buffer depth, paged pages-per-step) chosen on the cold compile,
+# and search knobs gained ``autotune`` + ``mask_mode``; v3 plans predate the
+# tuning pass and are rejected so a recompile can pick up kernel tuning.
+PLAN_FORMAT_VERSION = 4
 
 
 class PlanApplyError(RuntimeError):
@@ -199,6 +203,9 @@ class ChunkPlan:
     final_peak: int
     stages: List[PlanStage] = field(default_factory=list)
     meta: Dict[str, Any] = field(default_factory=dict)
+    # serialized KernelTuning (kernels.autotune) chosen at cold compile;
+    # None when the plan was built with autotune off
+    tuning: Optional[Dict[str, Any]] = None
     version: int = PLAN_FORMAT_VERSION
 
     # -- JSON round-trip ----------------------------------------------------
@@ -216,7 +223,9 @@ class ChunkPlan:
             # recompile, which rewrites the entry at the current version
             raise PlanApplyError(
                 f"plan format v{d.get('version', 1)} does not match"
-                f" supported v{PLAN_FORMAT_VERSION}"
+                f" supported v{PLAN_FORMAT_VERSION}; recompile to pick up"
+                " kernel tuning (v4 plans persist the autotuned"
+                " KernelTuning; earlier versions predate it)"
             )
         stages = [
             PlanStage(
@@ -234,6 +243,7 @@ class ChunkPlan:
             final_peak=int(d["final_peak"]),
             stages=stages,
             meta=dict(d.get("meta", {})),
+            tuning=dict(d["tuning"]) if d.get("tuning") else None,
             version=int(d.get("version", 1)),
         )
 

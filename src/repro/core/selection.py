@@ -185,6 +185,7 @@ def rank_candidates(
     hyper: CostHyper,
     *,
     kernel_dispatch: bool = False,
+    mask_mode: str = "auto",
 ) -> List[Tuple[ChunkCandidate, int, int, float]]:
     """Score every candidate; return [(cand, n, est_peak, cost)] best-first.
 
@@ -193,7 +194,9 @@ def rank_candidates(
     ``kernel_tile_bytes`` set, so :meth:`ChunkCandidate.chunked_body_peak`
     charges the VMEM-tile-bounded body peak instead of the full chunk-slice
     intermediates — kernelizable regions (attention, SwiGLU) look as cheap
-    to chunk as they actually are once dispatched.
+    to chunk as they actually are once dispatched.  ``mask_mode`` is the
+    config's mask knob: under ``'auto'`` candidates whose mask classifies as
+    a computed band stop charging mask tile bytes.
     """
     from . import stats
 
@@ -204,7 +207,7 @@ def rank_candidates(
     if kernel_dispatch:
         from .kernel_dispatch import annotate_candidates
 
-        annotate_candidates(g, cands)
+        annotate_candidates(g, cands, mask_mode)
     total_flops = graph_flops(g)
     max_density = max(c.density for c in cands)
     env = _selection_env(g, prof)

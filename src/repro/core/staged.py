@@ -82,6 +82,7 @@ class AutoChunkResult:
     plan_stages: List[PlanStage] = field(default_factory=list)
     from_cache: bool = False
     cache_key: Optional[str] = None
+    tuning: Optional[Dict[str, Any]] = None  # autotuned kernel configs (v4)
 
     def to_chunk_plan(self) -> ChunkPlan:
         """Detach the compilation into a serializable :class:`ChunkPlan`."""
@@ -96,6 +97,7 @@ class AutoChunkResult:
                 "weight_bytes": self.weight_bytes,
                 "compile_s": round(self.elapsed_s, 3),
             },
+            tuning=dict(self.tuning) if self.tuning else None,
         )
 
     @property
@@ -177,6 +179,7 @@ def _package_result(
     elapsed_s: float,
     from_cache: bool = False,
     cache_key: Optional[str] = None,
+    tuning: Optional[Dict[str, Any]] = None,
 ) -> AutoChunkResult:
     """Wrap a flat callable back into the original pytree signature."""
     final_flat = fn
@@ -199,6 +202,7 @@ def _package_result(
         plan_stages=plan_stages,
         from_cache=from_cache,
         cache_key=cache_key,
+        tuning=tuning,
     )
 
 
@@ -230,7 +234,8 @@ def _search_loop(
             dim_blocklist=frozenset(config.dim_blocklist),
         )
         ranked = rank_candidates(
-            g, prof, cands, budget_bytes, config.hyper, kernel_dispatch=kd
+            g, prof, cands, budget_bytes, config.hyper, kernel_dispatch=kd,
+            mask_mode=config.mask_mode,
         )
         if config.verbose:
             print(
@@ -426,9 +431,17 @@ class Traced:
         # single-lowering emission: the multi-stage plan was applied as
         # graph rewrites above; dispatch + emit + ONE verification re-trace
         # happen here regardless of how many stages were applied
+        tuning = None
         if pstages:
             if config.resolve_kernel_dispatch():
-                dispatch_graph(lowered)
+                # one autotune pass per cold compile; the winning tuning is
+                # persisted in the plan so warm replays pass it back in
+                # (autotune_passes stays 0 on every cache/bucket hit)
+                lowered, tuning = dispatch_graph(
+                    lowered,
+                    autotune=config.resolve_autotune(),
+                    mask_mode=config.mask_mode,
+                )
             cur = emit(lowered)
             g, _ = trace(cur, self.flat_args, weight_argnums=self.weight_flat)
             prof = estimate_memory(g)
@@ -445,6 +458,7 @@ class Traced:
                 "weight_bytes": prof.weight_bytes,
                 "compile_s": round(time.time() - self._t0, 3),
             },
+            tuning=tuning.to_dict() if tuning is not None else None,
         )
         if cache is not None:
             cache.put(ckey, plan)
@@ -475,6 +489,7 @@ class Traced:
                 rescale=rescale,
                 record=rec,
                 kernel_dispatch=self.cf.config.resolve_kernel_dispatch(),
+                mask_mode=self.cf.config.mask_mode,
             )
         except PlanApplyError:
             stats.bump("plan_replay_failures")
@@ -513,6 +528,7 @@ class Traced:
                 final_peak=prof.peak_bytes,
                 stages=pstages,
                 meta=meta,
+                tuning=saved.tuning,  # bucket hits inherit the home tuning
             )
         else:
             plan = saved
@@ -618,6 +634,7 @@ class Planned:
             elapsed_s=time.time() - t._t0,
             from_cache=self.from_cache,
             cache_key=self.plan.cache_key,
+            tuning=self.plan.tuning,
         )
         return CompiledFunction(result, bucket_hit=self.bucket_hit)
 

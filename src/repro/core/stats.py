@@ -32,6 +32,19 @@ _COUNTERS: Dict[str, int] = {
     # swapped for fused kernels vs bodies examined and left as scan codegen.
     "kernel_dispatch_hits": 0,
     "kernel_dispatch_misses": 0,
+    # attention dispatches whose mask classified as causal/sliding-window and
+    # lowered onto the position-computed kernel (no (Sq,Skv) bool array ever
+    # exists); the remainder of kernel_dispatch_hits stream a boolean mask
+    "kernel_dispatch_computed_mask": 0,
+    # kernel autotune (kernels.autotune): ``autotune_passes`` counts actual
+    # candidate-grid evaluations (one per distinct site set per process —
+    # warm plan replays and bucket hits restore the persisted KernelTuning
+    # and MUST show 0, counter-asserted in CI), ``autotune_cache_hits``
+    # tuning requests served from the in-process site cache,
+    # ``autotune_trials`` individual candidate configs costed/timed.
+    "autotune_passes": 0,
+    "autotune_cache_hits": 0,
+    "autotune_trials": 0,
     "plan_cache_hits": 0,
     "plan_cache_misses": 0,
     "plan_replays": 0,

@@ -3,8 +3,8 @@
 Each kernel ships with a jit'd wrapper (ops.py) and a pure-jnp oracle
 (ref.py); tests sweep shapes/dtypes in interpret mode.
 """
-from . import ops, ref
-from .chunked_attention import chunked_attention
+from . import ops, ref, tiling
+from .chunked_attention import chunked_attention, computed_attention
 from .chunked_ffn import chunked_ffn
 from .rglru_scan import rglru_scan
 from .ssd_scan import ssd_scan
@@ -12,7 +12,9 @@ from .ssd_scan import ssd_scan
 __all__ = [
     "ops",
     "ref",
+    "tiling",
     "chunked_attention",
+    "computed_attention",
     "chunked_ffn",
     "rglru_scan",
     "ssd_scan",

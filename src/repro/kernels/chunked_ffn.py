@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .tiling import legal_block
+
 
 def _ffn_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref):
     fi = pl.program_id(1)
@@ -47,9 +49,8 @@ def chunked_ffn(
     """x: (S, d); w_gate/w_up: (d, f); w_down: (f, d) -> (S, d)."""
     S, d = x.shape
     f = w_gate.shape[1]
-    bs = min(block_s, S)
-    bf = min(block_f, f)
-    assert S % bs == 0 and f % bf == 0, (S, bs, f, bf)
+    bs = legal_block(S, block_s)
+    bf = legal_block(f, block_f)
     grid = (S // bs, f // bf)
     return pl.pallas_call(
         _ffn_kernel,

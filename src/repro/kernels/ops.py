@@ -19,11 +19,13 @@ import jax
 import jax.numpy as jnp
 
 from .chunked_attention import chunked_attention as _attn
+from .chunked_attention import computed_attention as _computed_attn
 from .chunked_attention import masked_attention as _masked_attn
 from .chunked_ffn import chunked_ffn as _ffn
 from .paged_attention import paged_attention_blocked as _paged_attn
 from .rglru_scan import rglru_scan as _rglru
 from .ssd_scan import ssd_scan as _ssd
+from .tiling import legal_block
 
 
 _INTERPRET_RESOLVED: "bool | None" = None
@@ -67,11 +69,18 @@ def set_interpret(value: "bool | None") -> bool:
 INTERPRET = interpret_default()
 
 
-def _fit_block(size: int, block: int) -> int:
-    b = min(block, size)
-    while size % b:
-        b //= 2
-    return max(b, 1)
+def _stream_block(size: int, block: int, buffer_depth: int) -> int:
+    """Legal block for the *streamed* axis at a given DMA buffer depth.
+
+    Pallas double-buffers every streamed input block by construction; depth 4
+    ("quad buffering", sglang-jax's ``test_quad_buffering`` trick) is realized
+    by halving the streamed block so twice as many half-size blocks are in
+    flight — same VMEM high-water mark, finer DMA granularity, more
+    compute/copy overlap on shapes where the copy dominates.
+    """
+    if buffer_depth >= 4:
+        block = max(block // 2, 1)
+    return legal_block(size, block)
 
 
 def _expand_gqa(k, H):
@@ -81,57 +90,75 @@ def _expand_gqa(k, H):
     return jnp.repeat(k, H // Kv, axis=2)
 
 
-@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_kv"))
-def attention(q, k, v, *, causal=True, window=None, block_q=128, block_kv=128):
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_kv",
+                                   "buffer_depth"))
+def attention(q, k, v, *, causal=True, window=None, block_q=128, block_kv=128,
+              buffer_depth=2):
     """GQA-aware fused attention.  q: (B,Sq,H,hd); k,v: (B,Skv,Kv,hd)."""
     H = q.shape[2]
     k = _expand_gqa(k, H)
     v = _expand_gqa(v, H)
-    bq = min(block_q, q.shape[1])
-    bkv = min(block_kv, k.shape[1])
-    while q.shape[1] % bq:
-        bq //= 2
-    while k.shape[1] % bkv:
-        bkv //= 2
+    bq = legal_block(q.shape[1], block_q)
+    bkv = _stream_block(k.shape[1], block_kv, buffer_depth)
     return _attn(
         q, k, v, causal=causal, window=window,
-        block_q=max(bq, 1), block_kv=max(bkv, 1), interpret=INTERPRET,
+        block_q=bq, block_kv=bkv, interpret=INTERPRET,
     )
 
 
-@partial(jax.jit, static_argnames=("block_s", "block_f"))
-def swiglu_ffn(x, w_gate, w_up, w_down, *, block_s=128, block_f=512):
+@partial(jax.jit, static_argnames=("block_s", "block_f", "buffer_depth"))
+def swiglu_ffn(x, w_gate, w_up, w_down, *, block_s=128, block_f=512,
+               buffer_depth=2):
     S = x.shape[0]
     f = w_gate.shape[1]
-    bs = min(block_s, S)
-    bf = min(block_f, f)
-    while S % bs:
-        bs //= 2
-    while f % bf:
-        bf //= 2
-    return _ffn(x, w_gate, w_up, w_down, block_s=max(bs, 1), block_f=max(bf, 1),
+    bs = legal_block(S, block_s)
+    bf = _stream_block(f, block_f, buffer_depth)
+    return _ffn(x, w_gate, w_up, w_down, block_s=bs, block_f=bf,
                 interpret=INTERPRET)
 
 
-@partial(jax.jit, static_argnames=("scale", "block_q", "block_kv"))
-def masked_attention(q, k, v, mask, *, scale, block_q=128, block_kv=128):
-    """Flat masked fused attention — the kernel-dispatch target.
+@partial(jax.jit, static_argnames=("scale", "block_q", "block_kv",
+                                   "buffer_depth"))
+def masked_attention(q, k, v, mask, *, scale, block_q=128, block_kv=128,
+                     buffer_depth=2):
+    """Flat masked fused attention — the arbitrary-mask dispatch target.
 
     ``q``: (N, Sq, hd); ``k``/``v``: (N, Skv, hd); ``mask``: (Nm, Sq, Skv)
-    boolean, Nm in {1, N}.  Block sizes shrink to divide the (possibly odd,
-    chunk-loop-sized) sequence extents.
+    boolean, Nm in {1, N}.  Block sizes round to legal divisors of the
+    (possibly odd, chunk-loop-sized) sequence extents.
     """
-    bq = _fit_block(q.shape[1], block_q)
-    bkv = _fit_block(k.shape[1], block_kv)
+    bq = legal_block(q.shape[1], block_q)
+    bkv = _stream_block(k.shape[1], block_kv, buffer_depth)
     return _masked_attn(
         q, k, v, mask, scale=scale,
         block_q=bq, block_kv=bkv, interpret=INTERPRET,
     )
 
 
-@partial(jax.jit, static_argnames=("scale", "q_max"))
+@partial(jax.jit, static_argnames=("scale", "causal", "window", "block_q",
+                                   "block_kv", "buffer_depth"))
+def computed_attention(q, k, v, q_offset=None, *, scale, causal=True,
+                       window=None, block_q=128, block_kv=128,
+                       buffer_depth=2):
+    """Flat fused attention, mask computed from positions — the preferred
+    dispatch target for causal / sliding-window sites.
+
+    ``q``: (N, Sq, hd); ``k``/``v``: (N, Skv, hd).  No mask array exists at
+    any level (the predicate lives in the kernel), and fully-masked kv
+    blocks are skipped.  ``q_offset`` — kv-coordinate of q row 0 — may be a
+    traced scalar (the chunk-loop start), so one trace serves every chunk.
+    """
+    bq = legal_block(q.shape[1], block_q)
+    bkv = _stream_block(k.shape[1], block_kv, buffer_depth)
+    return _computed_attn(
+        q, k, v, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, block_q=bq, block_kv=bkv, interpret=INTERPRET,
+    )
+
+
+@partial(jax.jit, static_argnames=("scale", "q_max", "pages_per_step"))
 def paged_attention(q, kv_pages, page_table, cu_q_lens, cu_kv_lens, *,
-                    scale=None, q_max=None):
+                    scale=None, q_max=None, pages_per_step=1):
     """Ragged paged flash attention — the paged serving path's core op.
 
     ``q``: (T, H, hd) — every sequence's new query tokens concatenated
@@ -159,7 +186,7 @@ def paged_attention(q, kv_pages, page_table, cu_q_lens, cu_kv_lens, *,
     qb = jnp.take(q, jnp.clip(idx, 0, T - 1), axis=0)        # (S, q_max, H, hd)
     out_b = _paged_attn(
         qb, kv_pages, page_table, q_lens, kv_lens,
-        scale=scale, interpret=INTERPRET,
+        scale=scale, pages_per_step=pages_per_step, interpret=INTERPRET,
     )
     # scatter back to the flat layout; padded rows land in a dump slot
     flat_idx = jnp.where(valid, idx, T).reshape(-1)

@@ -59,12 +59,15 @@ def split_kv(pages):
 def _paged_attn_kernel(
     # scalar-prefetch refs
     pt_ref, ql_ref, kl_ref,
-    # tensor refs
-    q_ref, kv_ref, o_ref,
-    # scratch
-    acc_ref, m_ref, l_ref,
-    *, scale: float, page_size: int, q_max: int, n_q_heads: int, n_kv_heads: int,
+    # tensor refs: q, pages_per_step kv page blocks, output, then scratch
+    q_ref, *rest,
+    scale: float, page_size: int, q_max: int, n_q_heads: int, n_kv_heads: int,
+    pages_per_step: int,
 ):
+    kv_refs = rest[:pages_per_step]
+    o_ref = rest[pages_per_step]
+    acc_ref, m_ref, l_ref = rest[pages_per_step + 1:]
+
     s = pl.program_id(0)
     ki = pl.program_id(1)
     nk = pl.num_programs(1)
@@ -78,37 +81,46 @@ def _paged_attn_kernel(
     q_len = ql_ref[s]
     kv_len = kl_ref[s]
 
-    @pl.when(ki * page_size < kv_len)
-    def _accumulate():
-        G = n_q_heads // n_kv_heads
-        hd = q_ref.shape[-1]
-        q = q_ref[0].astype(jnp.float32)                    # (q_max, H, hd)
-        k, v = split_kv(kv_ref[0].astype(jnp.float32))      # (ps, Kv, hd)
+    # unrolled over the step's pages: each logical page gets its own guarded
+    # online-softmax update, so one grid step drains ``pages_per_step``
+    # already-prefetched page DMAs (the autotuner picks the step width)
+    for t in range(pages_per_step):
+        kv_ref = kv_refs[t]
+        logical = ki * pages_per_step + t
 
-        qg = q.reshape(q_max, n_kv_heads, G, hd)
-        # (q_max, Kv, G, ps) logits for this page
-        logits = jnp.einsum("qkgd,pkd->qkgp", qg, k) * scale
-        logits = logits.reshape(q_max, n_q_heads, page_size)
+        @pl.when(logical * page_size < kv_len)
+        def _accumulate(kv_ref=kv_ref, logical=logical):
+            G = n_q_heads // n_kv_heads
+            hd = q_ref.shape[-1]
+            q = q_ref[0].astype(jnp.float32)                # (q_max, H, hd)
+            k, v = split_kv(kv_ref[0].astype(jnp.float32))  # (ps, Kv, hd)
 
-        kpos = ki * page_size + jax.lax.broadcasted_iota(
-            jnp.int32, (q_max, page_size), 1
-        )
-        qpos = (kv_len - q_len) + jax.lax.broadcasted_iota(
-            jnp.int32, (q_max, page_size), 0
-        )
-        mask = (kpos <= qpos) & (kpos < kv_len)
-        logits = jnp.where(mask[:, None, :], logits, NEG_INF)
+            qg = q.reshape(q_max, n_kv_heads, G, hd)
+            # (q_max, Kv, G, ps) logits for this page
+            logits = jnp.einsum("qkgd,pkd->qkgp", qg, k) * scale
+            logits = logits.reshape(q_max, n_q_heads, page_size)
 
-        m_prev = m_ref[...]                                  # (q_max, H)
-        m_cur = jnp.max(logits, axis=-1)
-        m_new = jnp.maximum(m_prev, m_cur)
-        p = jnp.exp(logits - m_new[..., None])               # (q_max, H, ps)
-        alpha = jnp.exp(m_prev - m_new)
-        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1)
-        pg = p.reshape(q_max, n_kv_heads, G, page_size)
-        pv = jnp.einsum("qkgp,pkd->qkgd", pg, v).reshape(q_max, n_q_heads, hd)
-        acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
-        m_ref[...] = m_new
+            kpos = logical * page_size + jax.lax.broadcasted_iota(
+                jnp.int32, (q_max, page_size), 1
+            )
+            qpos = (kv_len - q_len) + jax.lax.broadcasted_iota(
+                jnp.int32, (q_max, page_size), 0
+            )
+            mask = (kpos <= qpos) & (kpos < kv_len)
+            logits = jnp.where(mask[:, None, :], logits, NEG_INF)
+
+            m_prev = m_ref[...]                              # (q_max, H)
+            m_cur = jnp.max(logits, axis=-1)
+            m_new = jnp.maximum(m_prev, m_cur)
+            p = jnp.exp(logits - m_new[..., None])           # (q_max, H, ps)
+            alpha = jnp.exp(m_prev - m_new)
+            l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1)
+            pg = p.reshape(q_max, n_kv_heads, G, page_size)
+            pv = jnp.einsum("qkgp,pkd->qkgd", pg, v).reshape(
+                q_max, n_q_heads, hd
+            )
+            acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+            m_ref[...] = m_new
 
     @pl.when(ki == nk - 1)
     def _finish():
@@ -119,6 +131,7 @@ def _paged_attn_kernel(
 def paged_attention_blocked(
     q, kv_pages, page_table, q_lens, kv_lens, *,
     scale: float | None = None,
+    pages_per_step: int = 1,
     interpret: bool = False,
 ):
     """Ragged paged attention over per-sequence-blocked queries.
@@ -132,6 +145,12 @@ def paged_attention_blocked(
     physical index; they are skipped).  ``kv_lens[s]`` counts the row's
     total context *including* its own q tokens, which must already be
     written into the pool.  Returns (S, q_max, H, hd).
+
+    ``pages_per_step`` widens the inner grid step: the kernel takes that
+    many page-table-indexed KV operands per step (each its own prefetched
+    DMA block) and drains them in an unrolled guarded loop — more page
+    copies in flight per grid step, less grid overhead per page.  The
+    autotuner searches this width.
     """
     S, q_max, H, hd = q.shape
     P, page_size, two_kv, _ = kv_pages.shape
@@ -140,6 +159,8 @@ def paged_attention_blocked(
     if scale is None:
         scale = 1.0 / (hd ** 0.5)
     max_pages = page_table.shape[1]
+    pages_per_step = max(1, min(int(pages_per_step), max_pages))
+    n_steps = -(-max_pages // pages_per_step)  # ceil
 
     # inactive page-table entries may be uninitialized: clamp so the
     # prefetched index map always names a physical page
@@ -150,17 +171,26 @@ def paged_attention_blocked(
     kernel = functools.partial(
         _paged_attn_kernel,
         scale=float(scale), page_size=page_size, q_max=q_max,
-        n_q_heads=H, n_kv_heads=Kv,
+        n_q_heads=H, n_kv_heads=Kv, pages_per_step=pages_per_step,
     )
+
+    def _kv_spec(t):
+        # logical page of sub-step t; clamped past max_pages (the tail of a
+        # non-dividing step width) — those reads are skipped in the kernel
+        return pl.BlockSpec(
+            (1, page_size, two_kv, hd),
+            lambda s, ki, pt, ql, kl, t=t: (
+                pt[s, jnp.minimum(ki * pages_per_step + t, max_pages - 1)],
+                0, 0, 0,
+            ),
+        )
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
-        grid=(S, max_pages),
+        grid=(S, n_steps),
         in_specs=[
             pl.BlockSpec((1, q_max, H, hd), lambda s, ki, pt, ql, kl: (s, 0, 0, 0)),
-            pl.BlockSpec(
-                (1, page_size, two_kv, hd),
-                lambda s, ki, pt, ql, kl: (pt[s, ki], 0, 0, 0),
-            ),
+            *[_kv_spec(t) for t in range(pages_per_step)],
         ],
         out_specs=pl.BlockSpec(
             (1, q_max, H, hd), lambda s, ki, pt, ql, kl: (s, 0, 0, 0)
@@ -176,4 +206,4 @@ def paged_attention_blocked(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((S, q_max, H, hd), q.dtype),
         interpret=interpret,
-    )(page_table, q_lens, kv_lens, q, kv_pages)
+    )(page_table, q_lens, kv_lens, q, *([kv_pages] * pages_per_step))

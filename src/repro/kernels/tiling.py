@@ -1,0 +1,72 @@
+"""Shared tile-legality rules for the Pallas kernels and the autotuner.
+
+TPU tiling constraints (Mosaic): the last dim maps onto 128 lanes and the
+second-to-last onto 8 sublanes (f32; bf16 wants 16 but Mosaic pads), so
+sequence-axis block sizes should be sublane multiples.  Pallas additionally
+requires a block to divide the axis it tiles (the grid is ``size // block``
+with per-block index maps; a non-dividing block would read out of bounds).
+
+Both the hand-tuned kernel entry points (``chunked_attention.py`` /
+``chunked_ffn.py``) and the autotune candidate grid
+(``kernels.autotune``) go through :func:`legal_block`, so "legal tile" is
+one definition — ``bq = min(block_q, Sq)`` clamping that used to produce
+non-dividing (AssertionError) or lane-misaligned tiles is gone.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+# f32 sublane count — the alignment unit for sequence-axis block dims.
+SUBLANE = 8
+
+
+def is_legal_block(total: int, block: int, *, align: int = SUBLANE) -> bool:
+    """True when ``block`` legally tiles an axis of extent ``total``.
+
+    Legal means: divides ``total`` (Pallas grid requirement) AND is either
+    sublane-aligned or the whole axis (a single block of odd extent is as
+    aligned as that axis can get — Mosaic pads it internally).
+    """
+    if not 0 < block <= total:
+        return False
+    if total % block:
+        return False
+    return block % align == 0 or block == total
+
+
+def legal_block(total: int, want: int, *, align: int = SUBLANE) -> int:
+    """Largest legal block <= ``want`` for an axis of extent ``total``.
+
+    Prefers the largest aligned divisor; when no divisor of ``total`` up to
+    ``want`` is a multiple of ``align`` (odd extents, tiny axes) it falls
+    back to the largest divisor, bottoming out at the full axis -- never an
+    illegal (non-dividing) tile, unlike ``min()``-then-assert clamping.
+    """
+    total = int(total)
+    want = max(1, min(int(want), total))
+    best = 0
+    for b in range(want, 0, -1):
+        if total % b:
+            continue
+        if best == 0:
+            best = b  # largest divisor <= want (alignment fallback)
+        if b % align == 0:
+            return b
+    return best or total
+
+
+def legal_candidates(
+    total: int, grid: Sequence[int], *, align: int = SUBLANE
+) -> List[int]:
+    """Distinct legal blocks nearest each requested grid point, ascending.
+
+    This is the autotuner's legality filter: the same rounding the manual
+    kernel paths apply, so every candidate the tuner times is a block the
+    kernel would actually accept.
+    """
+    out: List[int] = []
+    for want in grid:
+        b = legal_block(total, want, align=align)
+        if b not in out:
+            out.append(b)
+    return sorted(out)

@@ -21,6 +21,13 @@ padded-executable reuse path.
 cache with telemetry-driven eviction (triggered at the engine's idle
 points; see ``PlanCache.evict``).
 
+``--autotune`` runs the kernel autotune pass on cold compiles and prints
+the ``[serve] autotune:`` counter line (``autotune_passes`` /
+``autotune_cache_hits`` / ``autotune_trials`` / ``best=``).  The winning
+tuning persists in the v4 plan, so a warm ``--plan-cache`` run reports
+``autotune_passes=0``.  With ``--paged`` the pass instead tunes the paged
+kernel's pages-per-grid-step for each compiled step width.
+
 ``--paged`` switches to :class:`~repro.serving.PagedServeEngine`:
 continuous batching on a paged KV pool with planner-driven chunked prefill.
 ``--stagger`` serves staggered-length prompts (request ``i`` gets a
@@ -66,7 +73,8 @@ def serve_paged(cfg, params, rng, args):
         cfg, params,
         max_seqs=args.max_seqs, max_len=args.max_len,
         page_size=args.page_size, num_pages=args.num_pages,
-        autochunk_budget=args.autochunk, prefill_chunk=chunk,
+        autochunk_budget=args.autochunk, autotune=args.autotune,
+        prefill_chunk=chunk,
         prefix_cache=args.prefix_cache, spill_pages=args.spill_pages,
         greedy=not args.sample, seed=args.seed,
     )
@@ -140,6 +148,15 @@ def serve_paged(cfg, params, rng, args):
         f" admission_refusals={d['admission_refusals']}"
         f" padded_kv_waste_bytes={m['kv_pool']['padded_kv_waste_bytes']}"
     )
+    if args.autotune:
+        tuned = engine.kernel_tuning
+        print(
+            "[serve] autotune:"
+            f" autotune_passes={d['autotune_passes']}"
+            f" autotune_cache_hits={d['autotune_cache_hits']}"
+            f" autotune_trials={d['autotune_trials']}"
+            f" best={tuned.describe() if tuned is not None else 'none'}"
+        )
     if engine.prefix_cache is not None:
         pc = m["prefix_cache"]
         print(
@@ -168,6 +185,11 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--autochunk", type=float, default=None)
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the kernel autotune pass on cold compiles"
+                         " (tile sizes, DMA depth, paged pages-per-step);"
+                         " the winner persists in the v4 plan so warm"
+                         " replays skip it")
     ap.add_argument("--plan-cache", type=str, default=None,
                     help="on-disk plan cache directory (shared across runs)")
     ap.add_argument("--bucket-lens", type=str, default=None,
@@ -235,10 +257,12 @@ def main(argv=None):
         if args.bucket_lens else None
     )
     t_build0 = time.time()
+    before_build = stats.snapshot()
     engine = ServeEngine(
         cfg, params,
         max_batch=args.max_batch, max_len=args.max_len,
         autochunk_budget=args.autochunk,
+        autotune=args.autotune,
         plan_cache=args.plan_cache,
         bucket_lens=bucket_lens,
         canonical_bucket_exec=not args.no_canonical_exec,
@@ -256,6 +280,24 @@ def main(argv=None):
               f" (stages={len(res.plan)}, exec_len={engine.exec_len},"
               f" peak {res.baseline_peak/2**20:.1f} ->"
               f" {res.final_peak/2**20:.1f} MiB)")
+        if args.autotune:
+            db = stats.delta(before_build)
+            tuned = getattr(res, "tuning", None)
+            if tuned:
+                from ..kernels.autotune import KernelTuning
+
+                best = KernelTuning.from_dict(tuned).describe()
+            else:
+                best = "none"
+            # warm replays restore the plan's persisted tuning, so
+            # autotune_passes stays 0 — the line CI's serving smoke greps
+            print(
+                "[serve] autotune:"
+                f" autotune_passes={db['autotune_passes']}"
+                f" autotune_cache_hits={db['autotune_cache_hits']}"
+                f" autotune_trials={db['autotune_trials']}"
+                f" best={best}"
+            )
 
     def serve_batch(tag: str):
         t0 = time.time()

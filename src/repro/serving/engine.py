@@ -86,6 +86,7 @@ class ServeEngine:
         max_batch: int = 4,
         max_len: int = 256,
         autochunk_budget: Optional[float] = None,
+        autotune: bool = False,
         plan_cache=None,
         bucket_lens: Optional[Any] = None,
         canonical_bucket_exec: bool = True,
@@ -104,6 +105,10 @@ class ServeEngine:
         self.greedy = greedy
         self.key = jax.random.PRNGKey(seed)
         self.autochunk_budget = autochunk_budget
+        # force the kernel autotune pass on cold compiles; the winning
+        # KernelTuning persists in the plan (v4), so warm replays and bucket
+        # hits reuse it with autotune_passes staying 0
+        self.autotune = autotune
         # accept a PlanCache, a directory path, or None; with a budget set,
         # an in-memory cache is always created so that reconfigure() back to
         # a previously seen shape replays the stored plan instead of
@@ -216,6 +221,7 @@ class ServeEngine:
                     ChunkConfig.from_scalar(
                         self.autochunk_budget,
                         weight_argnums=(),
+                        autotune="on" if self.autotune else "auto",
                         canonical_bucket_exec=self.canonical_bucket_exec,
                         cache_policy=self.cache_policy,
                         cache_max_entries=self.cache_max_entries,
@@ -478,6 +484,7 @@ class PagedServeEngine:
         page_size: int = 16,
         num_pages: Optional[int] = None,
         autochunk_budget: Optional[float] = None,
+        autotune: bool = False,
         prefill_chunk="auto",
         prefix_cache: bool = False,
         spill_pages: int = 0,
@@ -504,6 +511,10 @@ class PagedServeEngine:
         self.greedy = greedy
         self.key = jax.random.PRNGKey(seed)
         self.autochunk_budget = autochunk_budget
+        # autotune the paged kernel's pages-per-grid-step per step width;
+        # the in-process tune cache dedups repeat widths across engines
+        self.autotune = autotune
+        self.kernel_tuning = None
 
         if num_pages is None:
             # default capacity: every row of the step batch can hold a
@@ -577,6 +588,23 @@ class PagedServeEngine:
         n_flat = self.pool.pages.shape[1] * ps        # includes trash page
         trash_slot = self.pool.trash_page * ps
 
+        pages_per_step = 1
+        if self.autotune:
+            from ..kernels import autotune as _autotune
+
+            tuning = _autotune.tune_sites(
+                [{
+                    "kind": "paged",
+                    "page_size": ps, "max_pages": mp, "q_max": q_max,
+                    "h": cfg.n_heads, "kv": cfg.n_kv_heads, "hd": cfg.hd,
+                    "n_seqs": S,
+                }],
+                interpret=ops.interpret_default(),
+            )
+            if tuning.paged:
+                pages_per_step = int(tuning.paged["pages_per_step"])
+            self.kernel_tuning = tuning
+
         def layer_params(i):
             if cfg.scan_layers:
                 return jax.tree.map(lambda a: a[i], params["blocks"])
@@ -610,6 +638,7 @@ class PagedServeEngine:
                 pages = pages.at[i].set(flat.reshape(pages.shape[1:]))
                 o = paged_attention_blocked(
                     q, pages[i], page_table, q_lens, kv_lens,
+                    pages_per_step=pages_per_step,
                     interpret=ops.INTERPRET,
                 )
                 h = h + o.reshape(S, q_max, -1) @ p["attn"]["wo"]

@@ -122,12 +122,15 @@ def test_config_search_knobs_matches_legacy_layout():
     knobs = cfg.search_knobs()
     assert set(knobs) == {
         "max_stages", "beam", "window", "min_gain", "allow_hoist",
-        "dim_blocklist", "anneal", "kernel_dispatch",
+        "dim_blocklist", "anneal", "kernel_dispatch", "autotune",
+        "mask_mode",
     }
     assert knobs["dim_blocklist"] == [2, 4]
-    # the *resolved* dispatch decision feeds the key, so TPU-searched plans
-    # are never silently replayed on a CPU host
+    # the *resolved* dispatch/autotune decisions feed the key, so
+    # TPU-searched plans are never silently replayed on a CPU host
     assert isinstance(knobs["kernel_dispatch"], bool)
+    assert isinstance(knobs["autotune"], bool)
+    assert knobs["mask_mode"] in ("auto", "bool")
 
 
 # ---------------------------------------------------------------------------

@@ -23,6 +23,7 @@ from . import (
     arch_coverage,
     codegen_bench,
     max_seq,
+    obs_bench,
     roofline,
     serving_bench,
     throughput_vs_budget,
@@ -40,11 +41,13 @@ SUITES = {
     "roofline": roofline.run,
     "codegen": codegen_bench.run,
     "serving": serving_bench.run,
+    "obs": obs_bench.run,
 }
 
 BASELINE_BENCH = str(Path(__file__).resolve().parent / "BENCH_codegen.json")
 BASELINE_SERVING = str(Path(__file__).resolve().parent / "BENCH_serving.json")
 BASELINE_KERNELS = str(Path(__file__).resolve().parent / "BENCH_kernels.json")
+BASELINE_OBS = str(Path(__file__).resolve().parent / "BENCH_obs.json")
 
 
 def smoke(rows) -> None:
@@ -99,13 +102,18 @@ def main() -> None:
                          " benchmark JSON (estimator peaks computed-vs-bool"
                          " per length, tuned-vs-default runtime, warm-replay"
                          " autotune counters) to this path")
+    ap.add_argument("--obs-bench-out", type=str, default=None,
+                    help="write the observability-overhead benchmark JSON"
+                         " (paged decode tok/s with metrics on vs off,"
+                         " span/histogram structure, plan_accuracy) to this"
+                         " path")
     args = ap.parse_args()
     from . import common
 
     if args.plan_cache:
         common.set_plan_cache(args.plan_cache)
     if (args.bench_out or args.bench_check or args.serving_bench_out
-            or args.kernel_bench_out):
+            or args.kernel_bench_out or args.obs_bench_out):
         import json
 
         problems = []
@@ -139,14 +147,25 @@ def main() -> None:
             if args.bench_check:
                 k_base = json.loads(Path(BASELINE_KERNELS).read_text())
                 problems += vs_fused_kernel.check_against(k_base, fresh_k)
+        if args.obs_bench_out or args.bench_check:
+            fresh_obs = obs_bench.run_obs_bench()
+            print(json.dumps(fresh_obs, indent=2))
+            if args.obs_bench_out:
+                Path(args.obs_bench_out).write_text(
+                    json.dumps(fresh_obs, indent=2) + "\n"
+                )
+            if args.bench_check:
+                obs_base = json.loads(Path(BASELINE_OBS).read_text())
+                problems += obs_bench.check_against(obs_base, fresh_obs)
         if args.bench_check:
             for p in problems:
                 print(f"# BENCH REGRESSION: {p}", file=sys.stderr)
             if problems:
                 sys.exit(1)
             print("# bench check ok: codegen counts, paged serving"
-                  " counters, and kernel autotune/computed-mask invariants"
-                  " within baseline", file=sys.stderr)
+                  " counters, kernel autotune/computed-mask invariants,"
+                  " and observability overhead within baseline",
+                  file=sys.stderr)
         return
     if args.smoke:
         names = ["smoke"]

@@ -231,10 +231,15 @@ def plan_prefill_chunk(
         c *= 2
     candidates.append(max_len)
 
+    from ..obs.tracing import span
+
     peaks: Dict[int, int] = {}
-    for c in candidates:
-        g = _prefill_step_graph(cfg, c, max_len)
-        peaks[c] = estimate_memory(g).peak_bytes
+    with span("compile.plan_prefill", max_len=max_len,
+              candidates=len(candidates)):
+        for c in candidates:
+            with span("compile.estimate", chunk=c):
+                g = _prefill_step_graph(cfg, c, max_len)
+                peaks[c] = estimate_memory(g).peak_bytes
     baseline = peaks[max_len]
     budget_bytes = int(budget) if budget > 1.0 else int(baseline * budget)
 

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from . import stats
+from ..obs.tracing import TRACER, span
 from .graph import Graph, Var, atom_bytes, is_var
 from .search import ChunkCandidate
 
@@ -436,9 +437,11 @@ def apply_chunk(
     no tracing; applying a K-stage plan is K calls on one graph.
     """
     stats.bump("lowering_rewrites")
-    node = make_chunk_loop(g, cand, n_chunks)
-    if validate:
-        validate_body(node)
+    with span("lower.apply_chunk", region=(cand.s, cand.e),
+              n_chunks=n_chunks):
+        node = make_chunk_loop(g, cand, n_chunks)
+        if validate:
+            validate_body(node)
     nodes = (
         list(g.eqns[: cand.s])
         + [g.eqns[i] for i in cand.hoisted]
@@ -466,6 +469,9 @@ def emit(g: Graph) -> Callable[..., Tuple[Any, ...]]:
     of how many chunk stages the graph carries.
     """
     stats.bump("lowering_emits")
+    # emission itself is lazy (cost is paid at the verification re-trace);
+    # an instant event marks the single emit per compiled plan
+    TRACER.instant("lower.emit", eqns=len(g.eqns))
     consts = dict(g.consts)
     invars = list(g.invars)
     outvars = list(g.outvars)

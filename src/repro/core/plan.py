@@ -406,7 +406,8 @@ class PlanCache:
     BUCKET_SUBDIR = "buckets"
     POLICIES = ("lru", "cost_lfu")
 
-    def __init__(self, path: Optional[Any] = None):
+    def __init__(self, path: Optional[Any] = None, *,
+                 clock: Optional[Any] = None):
         self._mem: Dict[str, ChunkPlan] = {}
         self._mem_buckets: Dict[str, ChunkPlan] = {}
         self.path: Optional[Path] = Path(path) if path is not None else None
@@ -417,10 +418,16 @@ class PlanCache:
         self.bucket_hits = 0
         self.bucket_misses = 0
         self.evictions = 0
+        # Recency/age timestamp source, injectable so telemetry tests pin
+        # time instead of sleeping (obs.clock.ManualClock).  The default
+        # MUST stay wall time: the cross-process recency signal is the plan
+        # file's mtime (os.utime below), which other processes compare
+        # against their own wall clock.
+        self._clock = clock if clock is not None else time.time
         # per-plan serving telemetry (process-local): hit counts, last-use
-        # timestamps, compile cost, per-bucket use.  Disk recency is kept in
-        # the file mtime (refreshed on every hit) so LRU works across
-        # processes sharing a cache directory.
+        # timestamps, compile cost, per-bucket use, plan-accuracy reports.
+        # Disk recency is kept in the file mtime (refreshed on every hit)
+        # so LRU works across processes sharing a cache directory.
         self._telemetry: Dict[str, Dict[str, Any]] = {}
 
     # ------------------------------------------------------------------
@@ -489,7 +496,7 @@ class PlanCache:
         disk-backed entries the file mtime is refreshed as the cross-process
         recency signal.
         """
-        now = time.time() if now is None else now
+        now = self._clock() if now is None else now
         m = self._telemetry.setdefault(
             key,
             {"hits": 0, "last_used": now, "compile_s": 0.0, "buckets": {}},
@@ -513,6 +520,21 @@ class PlanCache:
     def entry_meta(self, key: str) -> Dict[str, Any]:
         """Telemetry record for one plan (empty dict when never seen)."""
         return dict(self._telemetry.get(key, {}))
+
+    def record_accuracy(self, key: str, accuracy: Any) -> None:
+        """Attach a predicted-vs-measured activation-peak report
+        (:class:`repro.obs.accuracy.PlanAccuracy` or its dict form) to the
+        plan's telemetry — surfaced through :meth:`entry_meta` and the
+        serving status line."""
+        doc = accuracy.to_dict() if hasattr(accuracy, "to_dict") else dict(
+            accuracy
+        )
+        m = self._telemetry.setdefault(
+            key,
+            {"hits": 0, "last_used": self._clock(), "compile_s": 0.0,
+             "buckets": {}},
+        )
+        m["accuracy"] = doc
 
     def get_bucket(self, key: str) -> Optional[ChunkPlan]:
         """Look up a plan by shape-bucket key (never counted in ``len``)."""
@@ -685,7 +707,7 @@ class PlanCache:
             )
         if max_entries is not None and max_entries < 0:
             raise ValueError(f"max_entries must be >= 0, got {max_entries}")
-        now = time.time() if now is None else now
+        now = self._clock() if now is None else now
         # fast path for the common idle-point trigger: when no age bound is
         # requested and the plan count is already within budget, skip the
         # full record scan (which stats every file and parses every alias)

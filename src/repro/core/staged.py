@@ -36,6 +36,8 @@ import jax
 from jax import tree_util
 
 from . import stats
+from ..obs import accuracy as obs_accuracy
+from ..obs.tracing import span
 from .codegen import build_fn_from_plan
 from .config import ChunkConfig, ShapeBucketer
 from .estimation import MemoryProfile, estimate_memory
@@ -83,6 +85,10 @@ class AutoChunkResult:
     from_cache: bool = False
     cache_key: Optional[str] = None
     tuning: Optional[Dict[str, Any]] = None  # autotuned kernel configs (v4)
+    # predicted-vs-measured activation peak (repro.obs.accuracy), attached
+    # by Planned.compile(): the search-time analytic prediction next to the
+    # emitted program's live-set watermark
+    accuracy: Optional[obs_accuracy.PlanAccuracy] = None
 
     def to_chunk_plan(self) -> ChunkPlan:
         """Detach the compilation into a serializable :class:`ChunkPlan`."""
@@ -233,10 +239,11 @@ def _search_loop(
             g, prof, window=config.window, allow_hoist=config.allow_hoist,
             dim_blocklist=frozenset(config.dim_blocklist),
         )
-        ranked = rank_candidates(
-            g, prof, cands, budget_bytes, config.hyper, kernel_dispatch=kd,
-            mask_mode=config.mask_mode,
-        )
+        with span("compile.select", stage=stage, candidates=len(cands)):
+            ranked = rank_candidates(
+                g, prof, cands, budget_bytes, config.hyper, kernel_dispatch=kd,
+                mask_mode=config.mask_mode,
+            )
         if config.verbose:
             print(
                 f"[autochunk] stage {stage}: peak={prof.peak_bytes/2**20:.1f}MiB"
@@ -329,7 +336,7 @@ class Traced:
     def __init__(self, cf: "ChunkedFunction", example_args: Sequence[Any]):
         self.cf = cf
         config = cf.config
-        self._t0 = time.time()
+        self._t0 = time.perf_counter()
         self.flat_args, self.in_tree, self.weight_flat = _flatten_spec(
             example_args, config.weight_argnums
         )
@@ -344,10 +351,12 @@ class Traced:
             return tuple(out_leaves)
 
         self.flat_fn = flat_fn
-        self.graph, _ = trace(
-            flat_fn, self.flat_args, weight_argnums=self.weight_flat
-        )
-        self.profile: MemoryProfile = estimate_memory(self.graph)
+        with span("compile.trace", leaves=len(self.flat_args)):
+            self.graph, _ = trace(
+                flat_fn, self.flat_args, weight_argnums=self.weight_flat
+            )
+        with span("compile.estimate"):
+            self.profile: MemoryProfile = estimate_memory(self.graph)
         self.baseline_peak: int = self.profile.peak_bytes
         self.budget_bytes: int = config.resolve_budget(self.baseline_peak)
 
@@ -425,9 +434,10 @@ class Traced:
             stats.bump("plan_bucket_misses")
             cf.counters["bucket_misses"] += 1
 
-        lowered, prof, records, pstages = _search_with_anneal(
-            self.graph, self.profile, self.budget_bytes, config,
-        )
+        with span("compile.search", budget_bytes=self.budget_bytes):
+            lowered, prof, records, pstages = _search_with_anneal(
+                self.graph, self.profile, self.budget_bytes, config,
+            )
         # single-lowering emission: the multi-stage plan was applied as
         # graph rewrites above; dispatch + emit + ONE verification re-trace
         # happen here regardless of how many stages were applied
@@ -437,14 +447,18 @@ class Traced:
                 # one autotune pass per cold compile; the winning tuning is
                 # persisted in the plan so warm replays pass it back in
                 # (autotune_passes stays 0 on every cache/bucket hit)
-                lowered, tuning = dispatch_graph(
-                    lowered,
-                    autotune=config.resolve_autotune(),
-                    mask_mode=config.mask_mode,
+                with span("compile.lower", stages=len(pstages)):
+                    lowered, tuning = dispatch_graph(
+                        lowered,
+                        autotune=config.resolve_autotune(),
+                        mask_mode=config.mask_mode,
+                    )
+            with span("compile.emit", stages=len(pstages)):
+                cur = emit(lowered)
+                g, _ = trace(
+                    cur, self.flat_args, weight_argnums=self.weight_flat
                 )
-            cur = emit(lowered)
-            g, _ = trace(cur, self.flat_args, weight_argnums=self.weight_flat)
-            prof = estimate_memory(g)
+                prof = estimate_memory(g)
         else:  # nothing chunked: the baseline graph is the program
             cur, g, prof = self.flat_fn, self.graph, self.profile
         plan = ChunkPlan(
@@ -456,7 +470,7 @@ class Traced:
             meta={
                 "io_bytes": prof.io_bytes,
                 "weight_bytes": prof.weight_bytes,
-                "compile_s": round(time.time() - self._t0, 3),
+                "compile_s": round(time.perf_counter() - self._t0, 3),
             },
             tuning=tuning.to_dict() if tuning is not None else None,
         )
@@ -482,15 +496,17 @@ class Traced:
         """
         rec: List[Tuple[Graph, Any, int]] = []
         try:
-            fn, g, prof = build_fn_from_plan(
-                self.flat_fn, self.flat_args, saved,
-                weight_argnums=self.weight_flat,
-                baseline_graph=self.graph,
-                rescale=rescale,
-                record=rec,
-                kernel_dispatch=self.cf.config.resolve_kernel_dispatch(),
-                mask_mode=self.cf.config.mask_mode,
-            )
+            with span("compile.replay", stages=len(saved.stages),
+                      rescale=rescale):
+                fn, g, prof = build_fn_from_plan(
+                    self.flat_fn, self.flat_args, saved,
+                    weight_argnums=self.weight_flat,
+                    baseline_graph=self.graph,
+                    rescale=rescale,
+                    record=rec,
+                    kernel_dispatch=self.cf.config.resolve_kernel_dispatch(),
+                    mask_mode=self.cf.config.mask_mode,
+                )
         except PlanApplyError:
             stats.bump("plan_replay_failures")
             return None
@@ -631,12 +647,41 @@ class Planned:
             budget_bytes=t.budget_bytes,
             io_bytes=self.profile.io_bytes,
             weight_bytes=self.profile.weight_bytes,
-            elapsed_s=time.time() - t._t0,
+            elapsed_s=time.perf_counter() - t._t0,
             from_cache=self.from_cache,
             cache_key=self.plan.cache_key,
             tuning=self.plan.tuning,
         )
+        result.accuracy = self.plan_accuracy()
+        obs_accuracy.publish(result.accuracy)
         return CompiledFunction(result, bucket_hit=self.bucket_hit)
+
+    def plan_accuracy(self) -> obs_accuracy.PlanAccuracy:
+        """Predicted-vs-measured activation peak for this plan.
+
+        *Predicted* is the search-time analytic number — the selected
+        candidate's modeled ``peak_after`` (the ``chunk_loop`` body-peak
+        model, computed without any re-trace).  *Measured* is the exact
+        SSA live-set watermark of the emitted, verified jaxpr (real
+        ``scan`` bodies — the program that will actually run), so the
+        error is the analytic model's structural drift.  On backends with
+        allocator stats the serving layer upgrades the measurement to
+        ``device.memory_stats()`` deltas after execution.
+        """
+        predicted = (
+            self.plan.stages[-1].peak_after
+            if self.plan.stages else self.plan.baseline_peak
+        )
+        closed = getattr(self.graph, "closed_jaxpr", None)
+        if closed is not None:
+            measured = obs_accuracy.watermark_jaxpr(closed)
+        else:
+            measured = self.profile.peak_bytes
+        return obs_accuracy.compare(
+            predicted, measured, "interpret",
+            cache_key=self.plan.cache_key,
+            final_peak_estimate=self.profile.peak_bytes,
+        )
 
 
 class CompiledFunction:

@@ -34,6 +34,7 @@ from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from ..core import stats
+from ..obs.tracing import span
 from .tiling import legal_block, legal_candidates
 
 # candidate grids (rounded to legal blocks per site before costing)
@@ -318,26 +319,30 @@ def tune_sites(sites: Sequence[Dict[str, Any]], *,
 
     winners: Dict[str, Dict[str, int]] = {}
     trials = 0
-    for kind, kind_sites in sorted(by_kind.items()):
-        enum, analytic = _KINDS[kind]
-        # the candidate grid must be identical across this kind's sites so
-        # one config can serve them all: enumerate per site and intersect
-        cand_lists = [enum(s) for s in kind_sites]
-        cands = [c for c in cand_lists[0]
-                 if all(c in cl for cl in cand_lists[1:])]
-        if not cands:
-            cands = cand_lists[0]
-        best, best_cost = None, float("inf")
-        for cand in cands:
-            if mode == "measured":
-                cost = sum(_measured_cost(kind, s, cand) for s in kind_sites)
-            else:
-                cost = sum(analytic(s, cand) for s in kind_sites)
-            trials += 1
-            if cost < best_cost:
-                best, best_cost = cand, cost
-        if best is not None and best_cost != float("inf"):
-            winners[kind] = best
+    with span("compile.autotune", sites=len(sites), mode=mode):
+        for kind, kind_sites in sorted(by_kind.items()):
+            enum, analytic = _KINDS[kind]
+            # the candidate grid must be identical across this kind's sites
+            # so one config can serve them all: enumerate per site and
+            # intersect
+            cand_lists = [enum(s) for s in kind_sites]
+            cands = [c for c in cand_lists[0]
+                     if all(c in cl for cl in cand_lists[1:])]
+            if not cands:
+                cands = cand_lists[0]
+            best, best_cost = None, float("inf")
+            for cand in cands:
+                if mode == "measured":
+                    cost = sum(
+                        _measured_cost(kind, s, cand) for s in kind_sites
+                    )
+                else:
+                    cost = sum(analytic(s, cand) for s in kind_sites)
+                trials += 1
+                if cost < best_cost:
+                    best, best_cost = cand, cost
+            if best is not None and best_cost != float("inf"):
+                winners[kind] = best
     stats.bump("autotune_trials", trials)
 
     tuning = KernelTuning(

@@ -46,10 +46,19 @@ prompt — the pool-pressure filler that forces cached pages to spill so the
 following shared request restores them.  The ``[serve] prefix:`` line then
 reports ``prefix_hits``/``prefix_tokens_reused``/``cow_copies``/
 ``pages_spilled``/``pages_restored``.
+
+``--metrics-out FILE`` dumps the metrics registry (counters, gauges,
+TTFT/step-latency histograms) plus the ``plan_accuracy`` block
+(predicted vs measured activation peak) as JSON; ``--trace-out FILE``
+exports every compile-stage and serving-step span as Chrome-trace JSON
+(load in Perfetto or ``chrome://tracing``); ``--prom-out FILE`` writes
+the Prometheus text exposition.  ``--no-obs`` turns engine recording and
+the tracer off — the observability-overhead bench's baseline leg.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -59,7 +68,37 @@ from ..configs import get_config
 from ..core import stats
 from ..core.plan import PlanCache
 from ..models import model as M
+from ..obs import metrics as obs_metrics
+from ..obs.tracing import TRACER
 from ..serving import PagedServeEngine, Request, ServeEngine
+
+
+def write_obs_outputs(args, engine) -> None:
+    """Print the plan-accuracy status line and write ``--metrics-out`` /
+    ``--trace-out`` / ``--prom-out`` artifacts.  Shared by the slot and
+    paged paths; all exports happen after serving, off the hot path."""
+    acc = engine.plan_accuracy()
+    if acc is not None:
+        print(f"[serve] {acc.status_line()}")
+    if args.metrics_out:
+        doc = {
+            "counters": stats.snapshot(),
+            "metrics": obs_metrics.default_registry().snapshot(),
+        }
+        if acc is not None:
+            doc["plan_accuracy"] = acc.to_dict()
+        with open(args.metrics_out, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"[serve] metrics snapshot -> {args.metrics_out}")
+    if args.prom_out:
+        with open(args.prom_out, "w") as f:
+            f.write(obs_metrics.default_registry().to_prometheus())
+        print(f"[serve] prometheus exposition -> {args.prom_out}")
+    if args.trace_out:
+        TRACER.export_chrome(args.trace_out)
+        n_spans = len(TRACER.spans())
+        print(f"[serve] chrome trace ({n_spans} spans) -> {args.trace_out}")
 
 
 def serve_paged(cfg, params, rng, args):
@@ -68,7 +107,7 @@ def serve_paged(cfg, params, rng, args):
         "auto" if args.prefill_chunk == "auto" else int(args.prefill_chunk)
     )
     before = stats.snapshot()
-    t0 = time.time()
+    t0 = time.perf_counter()
     engine = PagedServeEngine(
         cfg, params,
         max_seqs=args.max_seqs, max_len=args.max_len,
@@ -77,17 +116,18 @@ def serve_paged(cfg, params, rng, args):
         prefill_chunk=chunk,
         prefix_cache=args.prefix_cache, spill_pages=args.spill_pages,
         greedy=not args.sample, seed=args.seed,
+        obs=not args.no_obs,
     )
     plan = engine.prefill_plan
     plan_note = (
         f" (planned: budget {plan.budget_bytes/2**20:.2f} MiB ->"
         f" peak {plan.peak_bytes/2**20:.2f} MiB)" if plan else " (fixed)"
     )
-    print(f"[serve] paged engine built in {time.time()-t0:.2f}s;"
+    print(f"[serve] paged engine built in {time.perf_counter()-t0:.2f}s;"
           f" pool {engine.pool.num_pages} pages x {engine.page_size} tokens,"
           f" prefill_chunk={engine.prefill_chunk}{plan_note}")
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     if args.shared_prefix > 0:
         # deterministic prefix scenario (CI's prefix smoke): shared-prompt
         # requests served sequentially, with every third request a one-off
@@ -131,7 +171,7 @@ def serve_paged(cfg, params, rng, args):
                 Request(rid=i, prompt=prompt, max_new_tokens=args.max_new)
             )
         done = engine.run()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     toks = sum(len(r.generated) for r in done)
     m = engine.metrics()
     d = stats.delta(before)
@@ -171,6 +211,7 @@ def serve_paged(cfg, params, rng, args):
             f" spilled_nodes={pc['spilled_nodes']}"
         )
     print(f"[serve] kv pool: {m['kv_pool']}")
+    write_obs_outputs(args, engine)
     for r in done[:3]:
         print(f"  req {r.rid}: {r.generated[:8]}...")
 
@@ -211,6 +252,20 @@ def main(argv=None):
     ap.add_argument("--sample", action="store_true",
                     help="sample from the logits instead of greedy argmax")
     ap.add_argument("--seed", type=int, default=0)
+    # --- observability ---
+    ap.add_argument("--metrics-out", type=str, default=None,
+                    help="write a JSON metrics snapshot (counters, gauges,"
+                         " TTFT/latency histograms, plan_accuracy block)"
+                         " after serving")
+    ap.add_argument("--trace-out", type=str, default=None,
+                    help="write compile+serve spans as Chrome-trace JSON"
+                         " (Perfetto / chrome://tracing loadable)")
+    ap.add_argument("--prom-out", type=str, default=None,
+                    help="write the Prometheus text exposition of the"
+                         " metrics registry")
+    ap.add_argument("--no-obs", action="store_true",
+                    help="disable engine metric/span recording (the"
+                         " overhead-bench off leg)")
     # --- paged continuous batching ---
     ap.add_argument("--paged", action="store_true",
                     help="serve on the paged KV pool (continuous batching,"
@@ -242,6 +297,8 @@ def main(argv=None):
                          " a one-off un-cached pressure filler) — the CI"
                          " prefix smoke")
     args = ap.parse_args(argv)
+    if args.no_obs:
+        TRACER.enabled = False
 
     cfg = get_config(args.arch)
     if args.local:
@@ -256,7 +313,7 @@ def main(argv=None):
         [int(s) for s in args.bucket_lens.split(",") if s]
         if args.bucket_lens else None
     )
-    t_build0 = time.time()
+    t_build0 = time.perf_counter()
     before_build = stats.snapshot()
     engine = ServeEngine(
         cfg, params,
@@ -270,8 +327,9 @@ def main(argv=None):
         cache_max_entries=args.cache_max_entries,
         greedy=not args.sample,
         seed=args.seed,
+        obs=not args.no_obs,
     )
-    t_build = time.time() - t_build0
+    t_build = time.perf_counter() - t_build0
     if args.autochunk is not None:
         res = engine.autochunk_result
         state = "warm" if res.from_cache else "cold"
@@ -300,7 +358,7 @@ def main(argv=None):
             )
 
     def serve_batch(tag: str):
-        t0 = time.time()
+        t0 = time.perf_counter()
         n0 = len(engine.finished)
         for i in range(args.requests):
             prompt = rng.integers(0, cfg.vocab_size, args.prompt_len).tolist()
@@ -308,7 +366,7 @@ def main(argv=None):
                 Request(rid=i, prompt=prompt, max_new_tokens=args.max_new)
             )
         done = engine.run()[n0:]
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         toks = sum(len(r.generated) for r in done)
         print(f"[serve]{tag} {len(done)} requests, {toks} tokens in {dt:.2f}s"
               f" ({toks/dt:.1f} tok/s, {engine.n_decode_steps} decode waves)")
@@ -347,6 +405,7 @@ def main(argv=None):
         f" kernel_dispatch_hits={snap['kernel_dispatch_hits']}"
         f" kernel_dispatch_misses={snap['kernel_dispatch_misses']}"
     )
+    write_obs_outputs(args, engine)
     for r in done[:3]:
         print(f"  req {r.rid}: {r.generated[:8]}...")
 

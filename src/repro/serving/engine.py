@@ -37,6 +37,7 @@ in flight).
 from __future__ import annotations
 
 import time
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -46,6 +47,9 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from ..core import stats
 from ..models import model as M
+from ..obs import accuracy as obs_accuracy
+from ..obs import metrics as obs_metrics
+from ..obs.tracing import span as _span
 
 
 @dataclass
@@ -60,7 +64,10 @@ class Request:
     cache_prefix: bool = True
     generated: List[int] = field(default_factory=list)
     done: bool = False
-    submitted_at: float = field(default_factory=time.time)
+    # monotonic timestamps (time.perf_counter): ttft_s/latency_s are
+    # durations, immune to wall-clock steps.  Not comparable across
+    # processes — serving spans/histograms are per-process anyway.
+    submitted_at: float = field(default_factory=time.perf_counter)
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
 
@@ -75,6 +82,56 @@ class Request:
         if self.finished_at is None:
             return None
         return self.finished_at - self.submitted_at
+
+
+class _EngineObs:
+    """Step-boundary serving instruments shared by both engines.
+
+    All recording happens at step boundaries with values the scheduler
+    already holds on the host (no extra device syncs, nothing per token).
+    ``enabled=False`` turns every record and span into a no-op — the
+    observability-overhead benchmark (BENCH_obs.json) gates the on/off
+    decode-throughput delta at <= 2%.
+    """
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        reg = obs_metrics.default_registry()
+        self.ttft = reg.histogram(
+            "serve_ttft_seconds", obs_metrics.LATENCY_BUCKETS_S,
+            "submit -> first token, per finished prefill")
+        self.queue_wait = reg.histogram(
+            "serve_queue_wait_seconds", obs_metrics.LATENCY_BUCKETS_S,
+            "submit -> admission, per admitted request")
+        self.step_latency = reg.histogram(
+            "serve_step_latency_seconds", obs_metrics.LATENCY_BUCKETS_S,
+            "one engine step (admit + ragged batch + sample + retire)")
+        self.decode_tps = reg.histogram(
+            "serve_decode_tok_per_s", obs_metrics.THROUGHPUT_BUCKETS,
+            "decode tokens per second, per step carrying decode rows")
+        self.pages_in_use = reg.gauge(
+            "serve_pages_in_use", "KV-pool pages currently allocated")
+        self.cache_hit_ratio = reg.gauge(
+            "serve_cache_hit_ratio",
+            "plan-cache (slot engine) or prefix-cache (paged) hit ratio")
+
+    def span(self, name: str, **args):
+        return _span(name, **args) if self.enabled else nullcontext()
+
+    def record_admit(self, req: Request, now: float) -> None:
+        if self.enabled:
+            self.queue_wait.observe(max(now - req.submitted_at, 0.0))
+
+    def record_first_token(self, req: Request) -> None:
+        if self.enabled and req.ttft_s is not None:
+            self.ttft.observe(req.ttft_s)
+
+    def record_step(self, dt_s: float, decode_tokens: int) -> None:
+        if not self.enabled:
+            return
+        self.step_latency.observe(dt_s)
+        if decode_tokens > 0 and dt_s > 0:
+            self.decode_tps.observe(decode_tokens / dt_s)
 
 
 class ServeEngine:
@@ -94,12 +151,17 @@ class ServeEngine:
         cache_max_entries: Optional[int] = None,
         greedy: bool = True,
         seed: int = 0,
+        obs: bool = True,
     ):
         from ..core import ShapeBucketer
         from ..core.plan import PlanCache, as_plan_cache
 
         self.cfg = cfg
         self.params = params
+        self._obs = _EngineObs(obs)
+        # allocator baseline for the device-side accuracy measurement
+        # (None on backends without memory_stats, e.g. CPU)
+        self._dev_base = obs_accuracy.device_bytes_in_use()
         self.max_batch = max_batch
         self.max_len = max_len
         self.greedy = greedy
@@ -237,8 +299,15 @@ class ServeEngine:
             # staged AOT: trace -> search (plan, cache/bucket-aware) -> compile
             # — the specs are already canonical (exec_len-shaped slots), so
             # this IS the bucket-boundary compile
-            compiled = self._chunked_fn.compile(cache_spec, tok_spec, pos_spec)
+            with self._obs.span("serve.compile", exec_len=self.exec_len):
+                compiled = self._chunked_fn.compile(
+                    cache_spec, tok_spec, pos_spec
+                )
             self.autochunk_result = compiled.result
+            res = compiled.result
+            if (res.accuracy is not None and res.cache_key
+                    and self.plan_cache is not None):
+                self.plan_cache.record_accuracy(res.cache_key, res.accuracy)
             decode_wave = compiled.fn
         self._decode_wave = jax.jit(decode_wave)
         self._prefill = jax.jit(
@@ -319,8 +388,11 @@ class ServeEngine:
             if not self.waiting:
                 break
             req = self.waiting.pop(0)
+            self._obs.record_admit(req, time.perf_counter())
             toks = jnp.asarray([req.prompt], dtype=jnp.int32)
-            logits, cache1 = self._prefill({"tokens": toks})
+            with self._obs.span("serve.prefill_chunk", rid=req.rid,
+                                tokens=len(req.prompt)):
+                logits, cache1 = self._prefill({"tokens": toks})
             self.cache = jax.tree.map(
                 lambda full, r: full.at[slot].set(r), self.cache, cache1
             )
@@ -333,7 +405,8 @@ class ServeEngine:
                 self.key, sub = jax.random.split(self.key)
                 first = int(jax.random.categorical(sub, logits[0, -1]))
             req.generated.append(first)
-            req.first_token_at = time.time()
+            req.first_token_at = time.perf_counter()
+            self._obs.record_first_token(req)
             self.slot_req[slot] = req
             self.slot_pos[slot] = len(req.prompt)
 
@@ -344,17 +417,34 @@ class ServeEngine:
             hit_eos = req.eos_id is not None and req.generated and req.generated[-1] == req.eos_id
             if len(req.generated) >= req.max_new_tokens or hit_eos:
                 req.done = True
-                req.finished_at = time.time()
+                req.finished_at = time.perf_counter()
                 self.finished.append(req)
                 self.slot_req[i] = None
 
     # ------------------------------------------------------------------
     def step(self):
         """Admit -> decode one wave -> retire."""
-        self._admit()
+        if not self._obs.enabled:
+            return self._step_inner()
+        t0 = time.perf_counter()
+        with self._obs.span("serve.step"):
+            rows = self._step_inner()
+        if rows:
+            dt = time.perf_counter() - t0
+            self._obs.record_step(dt, rows)
+            if self.plan_cache is not None:
+                seen = self.plan_cache.hits + self.plan_cache.misses
+                if seen:
+                    self._obs.cache_hit_ratio.set(
+                        self.plan_cache.hits / seen
+                    )
+
+    def _step_inner(self) -> int:
+        with self._obs.span("serve.admit"):
+            self._admit()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
-            return
+            return 0
         toks = jnp.asarray(
             [
                 (self.slot_req[i].generated[-1] if self.slot_req[i] else 0)
@@ -363,7 +453,8 @@ class ServeEngine:
             dtype=jnp.int32,
         )
         pos = jnp.asarray(self.slot_pos, dtype=jnp.int32)
-        logits, self.cache = self._decode_wave(self.cache, toks, pos)
+        with self._obs.span("serve.decode_wave", rows=len(active)):
+            logits, self.cache = self._decode_wave(self.cache, toks, pos)
         self.n_decode_steps += 1
         if self.greedy:
             nxt = jnp.argmax(logits, axis=-1)
@@ -375,6 +466,7 @@ class ServeEngine:
             self.slot_req[i].generated.append(int(nxt[i]))
             self.slot_pos[i] += 1
         self._retire()
+        return len(active)
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
         for _ in range(max_steps):
@@ -408,7 +500,29 @@ class ServeEngine:
                 out["plan_telemetry"] = self.plan_cache.entry_meta(
                     self.autochunk_result.cache_key
                 )
+        acc = self.plan_accuracy()
+        if acc is not None:
+            out["plan_accuracy"] = acc.to_dict()
         return out
+
+    def plan_accuracy(self) -> Optional[obs_accuracy.PlanAccuracy]:
+        """Predicted-vs-measured activation peak of the serving plan.
+
+        The interpret-mode record comes from compile time (search-time
+        analytic prediction vs the emitted jaxpr's live-set watermark);
+        on backends with allocator stats the measurement is upgraded to
+        the ``memory_stats()`` peak delta observed since construction.
+        """
+        res = self.autochunk_result
+        if res is None or res.accuracy is None:
+            return None
+        acc = obs_accuracy.with_device_measurement(
+            res.accuracy, self._dev_base
+        )
+        if acc is not res.accuracy and self.plan_cache is not None \
+                and res.cache_key:
+            self.plan_cache.record_accuracy(res.cache_key, acc)
+        return acc
 
 
 # ===========================================================================
@@ -490,6 +604,7 @@ class PagedServeEngine:
         spill_pages: int = 0,
         greedy: bool = True,
         seed: int = 0,
+        obs: bool = True,
     ):
         from ..core.estimation import plan_prefill_chunk
         from .kv_pool import KVPool
@@ -511,6 +626,9 @@ class PagedServeEngine:
         self.greedy = greedy
         self.key = jax.random.PRNGKey(seed)
         self.autochunk_budget = autochunk_budget
+        self._obs = _EngineObs(obs)
+        self._dev_base = obs_accuracy.device_bytes_in_use()
+        self._accuracy: Optional[obs_accuracy.PlanAccuracy] = None
         # autotune the paged kernel's pages-per-grid-step per step width;
         # the in-process tune cache dedups repeat widths across engines
         self.autotune = autotune
@@ -650,7 +768,8 @@ class PagedServeEngine:
             logits = L.unembed(cfg, params["embed"], last)   # (S, V)
             return logits, pages
 
-        fn = jax.jit(step)
+        with self._obs.span("serve.step_compile", q_max=q_max):
+            fn = jax.jit(step)
         self._step_fns[q_max] = fn
         self.sched_stats["step_compiles"] += 1
         return fn
@@ -724,6 +843,7 @@ class PagedServeEngine:
                 self.sched_stats["prefix_tokens_reused"] += matched
             self._next_seq_id += 1
             self.waiting.pop(0)
+            self._obs.record_admit(req, time.perf_counter())
             # matched tokens are already in the pool: prefill resumes at
             # the divergence point (kv_len/prefilled start there)
             self.running.append(
@@ -745,7 +865,7 @@ class PagedServeEngine:
                 len(req.generated) >= req.max_new_tokens or hit_eos
             ):
                 req.done = True
-                req.finished_at = time.time()
+                req.finished_at = time.perf_counter()
                 self.finished.append(req)
                 self.pool.free(st.seq_id)
             else:
@@ -755,7 +875,27 @@ class PagedServeEngine:
     # ------------------------------------------------------------------
     def step(self):
         """Admit -> one mixed ragged step -> sample -> retire."""
-        self._admit()
+        if not self._obs.enabled:
+            return self._step_inner()
+        t0 = time.perf_counter()
+        decoded0 = self.sched_stats["decode_tokens"]
+        stepped0 = self.sched_stats["steps"]
+        with self._obs.span("serve.step"):
+            self._step_inner()
+        if self.sched_stats["steps"] > stepped0:
+            dt = time.perf_counter() - t0
+            self._obs.record_step(
+                dt, self.sched_stats["decode_tokens"] - decoded0
+            )
+            self._obs.pages_in_use.set(self.pool.pages_in_use)
+            if self.prefix_cache is not None and self._next_seq_id:
+                self._obs.cache_hit_ratio.set(
+                    self.sched_stats["prefix_hits"] / self._next_seq_id
+                )
+
+    def _step_inner(self):
+        with self._obs.span("serve.admit"):
+            self._admit()
         if not self.running:
             return
 
@@ -797,13 +937,18 @@ class PagedServeEngine:
         page_table = self.pool.table_array(seq_ids, self.max_pages_per_seq)
 
         fn = self._step_fn(q_max)
-        logits, self.pool.pages = fn(
-            self.pool.pages,
-            jnp.asarray(tokens),
-            jnp.asarray(q_lens),
-            jnp.asarray(kv_lens),
-            page_table,
+        batch_span = (
+            "serve.prefill_chunk" if n_prefill_rows else "serve.decode_wave"
         )
+        with self._obs.span(batch_span, prefill_rows=n_prefill_rows,
+                            decode_rows=n_decode_rows, q_max=q_max):
+            logits, self.pool.pages = fn(
+                self.pool.pages,
+                jnp.asarray(tokens),
+                jnp.asarray(q_lens),
+                jnp.asarray(kv_lens),
+                page_table,
+            )
 
         # sample one token for every row that finished its context work
         need_rows = []
@@ -836,13 +981,14 @@ class PagedServeEngine:
                 self.key, sub = jax.random.split(self.key)
                 nxt = jax.random.categorical(sub, logits)
             nxt = jax.device_get(nxt)
-            now = time.time()
+            now = time.perf_counter()
             for row, st, finished_prefill in need_rows:
                 st.req.generated.append(int(nxt[row]))
                 if finished_prefill:
                     stats.bump("prefill_chunks")
                     self.sched_stats["prefill_chunks"] += 1
                     st.req.first_token_at = now
+                    self._obs.record_first_token(st.req)
                 else:
                     self.sched_stats["decode_tokens"] += 1
 
@@ -891,4 +1037,38 @@ class PagedServeEngine:
                 "peak_bytes": self.prefill_plan.peak_bytes,
                 "fits": self.prefill_plan.fits,
             }
+        acc = self.plan_accuracy()
+        if acc is not None:
+            out["plan_accuracy"] = acc.to_dict()
         return out
+
+    def plan_accuracy(self) -> Optional[obs_accuracy.PlanAccuracy]:
+        """Predicted-vs-measured peak for the prefill-chunk plan.
+
+        *Predicted* is the planner's estimate for the chosen chunk —
+        computed at construction, on the flattened one-block graph against
+        a ``max_len`` context.  *Measured* (interpret fallback) is the
+        live-set watermark of the same block step re-traced at the shapes
+        the engine actually executes: KV rounded up to whole pool pages.
+        The drift it surfaces is page-rounding plus the walkers'
+        structural differences (flattened graph vs raw nested jaxpr); on
+        backends with allocator stats the measurement upgrades to the
+        ``memory_stats()`` peak delta since construction.
+        """
+        if self.prefill_plan is None:
+            return None
+        if self._accuracy is None:
+            from ..core.estimation import _prefill_step_graph
+
+            kv_exec = self.max_pages_per_seq * self.page_size
+            g = _prefill_step_graph(self.cfg, self.prefill_chunk, kv_exec)
+            measured = obs_accuracy.watermark_jaxpr(g.closed_jaxpr)
+            self._accuracy = obs_accuracy.compare(
+                self.prefill_plan.peak_bytes, measured, "interpret",
+                chunk=self.prefill_chunk, kv_exec_len=kv_exec,
+                budget_bytes=self.prefill_plan.budget_bytes,
+            )
+            obs_accuracy.publish(self._accuracy)
+        return obs_accuracy.with_device_measurement(
+            self._accuracy, self._dev_base
+        )

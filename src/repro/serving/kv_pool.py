@@ -51,6 +51,7 @@ import numpy as np
 
 from ..core import stats
 from ..kernels.paged_attention import interleave_kv
+from ..obs.tracing import span as _span
 
 
 class OutOfPagesError(RuntimeError):
@@ -335,7 +336,8 @@ class KVPool:
         if not self._host_free:
             raise RuntimeError("host spill arena is full")
         slot = self._host_free.pop()
-        self._host[slot] = np.asarray(self.pages[:, page])
+        with _span("serve.spill", page=page, slot=slot):
+            self._host[slot] = np.asarray(self.pages[:, page])
         self.decref(page)
         self.spill_events += 1
         stats.bump("pages_spilled")
@@ -357,7 +359,9 @@ class KVPool:
                 in_use=self.pages_in_use, num_pages=self.num_pages,
             )
         page = self._free.pop()
-        self.pages = self.pages.at[:, page].set(jnp.asarray(self._host[slot]))
+        with _span("serve.restore", page=page, slot=slot):
+            self.pages = self.pages.at[:, page].set(
+                jnp.asarray(self._host[slot]))
         self._ref[page] = 1
         self._host_free.append(slot)
         self.alloc_events += 1

@@ -76,7 +76,7 @@ def precompile_one(
     def fwd(params, batch_d):
         return M.forward(cfg, params, batch_d)[0]
 
-    t0 = time.time()
+    t0 = time.perf_counter()  # monotonic: durations survive clock steps
     # staged AOT: precompiling only needs trace -> search — the searched
     # ChunkPlan is the deployment artifact; serving processes pay codegen
     # (cheap) at start-up, never the search
@@ -93,7 +93,7 @@ def precompile_one(
         "baseline_mib": planned.baseline_peak / 2**20,
         "final_mib": planned.final_peak / 2**20,
         "key": planned.plan.cache_key,
-        "elapsed_s": time.time() - t0,
+        "elapsed_s": time.perf_counter() - t0,
     }
 
 

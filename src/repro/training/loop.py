@@ -96,7 +96,7 @@ def run_train(
     step_fn = jax.jit(make_train_step(cfg, lr_fn, window=window))
     opt_state = adamw_init(params, moment_dtype="float32")
     history = []
-    t0 = time.time()
+    t0 = time.perf_counter()  # monotonic: durations survive clock steps
     for step in range(steps):
         batch = next(data)
         params, opt_state, metrics = step_fn(params, opt_state, batch)
@@ -105,7 +105,7 @@ def run_train(
             history.append({"step": step, **m})
             log_fn(
                 f"step {step:5d} loss={m['loss']:.4f} ce={m['ce']:.4f}"
-                f" lr={m['lr']:.2e} ({time.time()-t0:.1f}s)"
+                f" lr={m['lr']:.2e} ({time.perf_counter()-t0:.1f}s)"
             )
         if checkpoint_path and checkpoint_every and step and step % checkpoint_every == 0:
             save_checkpoint(checkpoint_path, params, step=step)

@@ -1,0 +1,161 @@
+"""Mesh-aware planning: per-device peak reduction + plan-cache mesh identity.
+
+Two promises from the sharded-planning work are priced here, both on the
+quickstart GPT block and both pure planning (estimation + cache keys, no
+multi-device runtime needed — this runs on single-device CI):
+
+* **per-device peak** — the same traced graph estimated twice, once
+  unsharded and once under a ``data=TP`` mesh with the batch axis sharded.
+  The gate is the paper-level claim: the sharded predicted peak must be
+  ``<= unsharded / TP * (1 + tol)``.  The divisor propagation includes a
+  backward refinement sweep (broadcast-born dims such as the causal mask's
+  batch dim inherit the sharding GSPMD would give them from their
+  consumers); without it the replicated mask floors the per-device peak
+  and this gate cannot hold.
+* **cache identity** — a plan searched without a mesh must never replay
+  onto a meshed config: the structural cache keys differ (the mesh hashes
+  into ``search_knobs``), a same-key lookup hits, and a cross-mesh lookup
+  is a recorded miss.
+
+``reduction_ratio`` (unsharded/sharded) is additionally gated against the
+committed ``BENCH_mesh.json`` so estimator changes that quietly lose
+sharding awareness fail CI even while staying under the absolute cap.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    ChunkConfig,
+    ChunkedFunction,
+    MeshSpec,
+    PlanCache,
+    estimate_memory,
+)
+
+from .common import gpt_block_model
+
+TP = 4             # data-parallel width; batch == TP so the axis divides
+SEQ = 64
+D = 64
+N_LAYERS = 1
+BUDGET = 0.5
+TOL_PCT = 15.0     # slack over the ideal unsharded/TP per-device peak
+RATIO_SLACK = 0.1  # allowed reduction_ratio drop vs the committed baseline
+
+
+def _mesh_spec(flat_args, tp: int) -> MeshSpec:
+    """Shard the int32 tokens leaf's batch dim over ``data``; replicate
+    everything else (weights stay replicated — this is DP, not TP)."""
+    in_specs = tuple(
+        ("data",)
+        if hasattr(leaf, "dtype") and leaf.dtype == jnp.int32
+        else None
+        for leaf in flat_args
+    )
+    return MeshSpec(axes=(("data", tp),), in_specs=in_specs)
+
+
+def run_mesh_bench() -> Dict:
+    cfg, params, batch, fwd = gpt_block_model(
+        SEQ, n_layers=N_LAYERS, d=D, batch=TP
+    )
+    flat, _ = jax.tree_util.tree_flatten((params, batch))
+    ms = _mesh_spec(flat, TP)
+
+    base_cfg = ChunkConfig(budget_ratio=BUDGET, weight_argnums=(0,))
+    mesh_cfg = ChunkConfig(
+        budget_ratio=BUDGET, weight_argnums=(0,), mesh_spec=ms
+    )
+    t0 = ChunkedFunction(fwd, base_cfg).trace(params, batch)
+    t1 = ChunkedFunction(fwd, mesh_cfg).trace(params, batch)
+
+    unsharded = estimate_memory(t0.graph).peak_bytes
+    sharded = estimate_memory(t0.graph, mesh_spec=ms).peak_bytes
+    key0, key1 = t0.cache_key(), t1.cache_key()
+
+    # cache identity: the unsharded plan must not replay onto the mesh
+    cache = PlanCache()
+    cache.put(key0, t0.search().plan)
+    before = cache.stats()
+    hit_same = cache.get(key0) is not None
+    hit_cross = cache.get(key1) is not None
+    after = cache.stats()
+
+    return {
+        "config": {
+            "tp": TP, "seq": SEQ, "d": D, "n_layers": N_LAYERS,
+            "batch": TP, "budget": BUDGET,
+        },
+        "unsharded_peak_bytes": int(unsharded),
+        "sharded_peak_bytes": int(sharded),
+        "ideal_per_device_bytes": int(unsharded // TP),
+        "reduction_ratio": round(unsharded / sharded, 3) if sharded else 0.0,
+        "tol_pct": TOL_PCT,
+        "cache": {
+            "key_unsharded": key0[:16],
+            "key_sharded": key1[:16],
+            "keys_differ": key0 != key1,
+            "hit_same_mesh": hit_same,
+            "hit_cross_mesh": hit_cross,
+            "misses_on_mesh_change": after["misses"] - before["misses"],
+        },
+    }
+
+
+def check_against(baseline: Dict, fresh: Dict) -> list:
+    """CI gates: the absolute per-device cap, ratio vs baseline, and the
+    never-replay-onto-the-wrong-mesh cache identity."""
+    problems = []
+    tp = fresh["config"]["tp"]
+    tol = float(baseline.get("tol_pct", TOL_PCT))
+    cap = fresh["unsharded_peak_bytes"] / tp * (1.0 + tol / 100.0)
+    if fresh["sharded_peak_bytes"] > cap:
+        problems.append(
+            f"sharded predicted peak {fresh['sharded_peak_bytes']}B exceeds"
+            f" unsharded/{tp} * (1+{tol}%) = {int(cap)}B"
+            f" (unsharded {fresh['unsharded_peak_bytes']}B)"
+        )
+    base_ratio = float(baseline.get("reduction_ratio", 0.0))
+    if fresh["reduction_ratio"] < base_ratio - RATIO_SLACK:
+        problems.append(
+            f"per-device reduction ratio {fresh['reduction_ratio']} fell"
+            f" below baseline {base_ratio} - {RATIO_SLACK}"
+        )
+    c = fresh["cache"]
+    if not c["keys_differ"]:
+        problems.append(
+            "plan cache key did not change when only the mesh changed"
+        )
+    if not c["hit_same_mesh"]:
+        problems.append("same-mesh plan cache lookup missed")
+    if c["hit_cross_mesh"]:
+        problems.append(
+            "unsharded plan replayed onto a meshed config (cross-mesh hit)"
+        )
+    if c["misses_on_mesh_change"] < 1:
+        problems.append(
+            "mesh change did not register a plan cache miss"
+            f" (delta={c['misses_on_mesh_change']})"
+        )
+    return problems
+
+
+def run(rows) -> None:
+    """Benchmark-suite entry point (``--only mesh``)."""
+    out = run_mesh_bench()
+    c = out["cache"]
+    rows.append(
+        (
+            f"mesh_peak_tp{out['config']['tp']}",
+            0.0,
+            f"unsharded={out['unsharded_peak_bytes']}"
+            f" sharded={out['sharded_peak_bytes']}"
+            f" ratio={out['reduction_ratio']}"
+            f" keys_differ={int(c['keys_differ'])}"
+            f" cross_mesh_hit={int(c['hit_cross_mesh'])}",
+        )
+    )

@@ -23,6 +23,7 @@ from . import (
     arch_coverage,
     codegen_bench,
     max_seq,
+    mesh_bench,
     obs_bench,
     roofline,
     serving_bench,
@@ -42,12 +43,14 @@ SUITES = {
     "codegen": codegen_bench.run,
     "serving": serving_bench.run,
     "obs": obs_bench.run,
+    "mesh": mesh_bench.run,
 }
 
 BASELINE_BENCH = str(Path(__file__).resolve().parent / "BENCH_codegen.json")
 BASELINE_SERVING = str(Path(__file__).resolve().parent / "BENCH_serving.json")
 BASELINE_KERNELS = str(Path(__file__).resolve().parent / "BENCH_kernels.json")
 BASELINE_OBS = str(Path(__file__).resolve().parent / "BENCH_obs.json")
+BASELINE_MESH = str(Path(__file__).resolve().parent / "BENCH_mesh.json")
 
 
 def smoke(rows) -> None:
@@ -91,8 +94,9 @@ def main() -> None:
                          " benchmarks/BENCH_codegen.json, the paged"
                          " serving counters vs BENCH_serving.json, and the"
                          " kernel autotune/computed-mask invariants vs"
-                         " BENCH_kernels.json (CI gate; implies all three"
-                         " benchmarks)")
+                         " BENCH_kernels.json, and the mesh-aware planning"
+                         " gates vs BENCH_mesh.json (CI gate; implies all"
+                         " of the above benchmarks)")
     ap.add_argument("--serving-bench-out", type=str, default=None,
                     help="write the paged-vs-fixed-slot serving benchmark"
                          " JSON (TTFT, decode tok/s, peak pages, padded-KV"
@@ -107,13 +111,19 @@ def main() -> None:
                          " (paged decode tok/s with metrics on vs off,"
                          " span/histogram structure, plan_accuracy) to this"
                          " path")
+    ap.add_argument("--mesh-bench-out", type=str, default=None,
+                    help="write the mesh-aware planning benchmark JSON"
+                         " (sharded vs unsharded predicted peak on the"
+                         " quickstart GPT, plan-cache miss on mesh change)"
+                         " to this path")
     args = ap.parse_args()
     from . import common
 
     if args.plan_cache:
         common.set_plan_cache(args.plan_cache)
     if (args.bench_out or args.bench_check or args.serving_bench_out
-            or args.kernel_bench_out or args.obs_bench_out):
+            or args.kernel_bench_out or args.obs_bench_out
+            or args.mesh_bench_out):
         import json
 
         problems = []
@@ -157,6 +167,16 @@ def main() -> None:
             if args.bench_check:
                 obs_base = json.loads(Path(BASELINE_OBS).read_text())
                 problems += obs_bench.check_against(obs_base, fresh_obs)
+        if args.mesh_bench_out or args.bench_check:
+            fresh_mesh = mesh_bench.run_mesh_bench()
+            print(json.dumps(fresh_mesh, indent=2))
+            if args.mesh_bench_out:
+                Path(args.mesh_bench_out).write_text(
+                    json.dumps(fresh_mesh, indent=2) + "\n"
+                )
+            if args.bench_check:
+                mesh_base = json.loads(Path(BASELINE_MESH).read_text())
+                problems += mesh_bench.check_against(mesh_base, fresh_mesh)
         if args.bench_check:
             for p in problems:
                 print(f"# BENCH REGRESSION: {p}", file=sys.stderr)
@@ -164,8 +184,8 @@ def main() -> None:
                 sys.exit(1)
             print("# bench check ok: codegen counts, paged serving"
                   " counters, kernel autotune/computed-mask invariants,"
-                  " and observability overhead within baseline",
-                  file=sys.stderr)
+                  " observability overhead, and mesh-aware planning"
+                  " within baseline", file=sys.stderr)
         return
     if args.smoke:
         names = ["smoke"]

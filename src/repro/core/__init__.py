@@ -13,6 +13,13 @@ from .estimation import (
     plan_prefill_chunk,
 )
 from .graph import Graph, dim_stride, eqn_flops, graph_flops, trace
+from .meshspec import (
+    MeshSpec,
+    propagate_divisors,
+    sequence_parallel_in_specs,
+    total_divisors,
+    validate_mesh_axes,
+)
 from .plan import (
     ChunkPlan,
     PlanApplyError,
@@ -50,6 +57,11 @@ __all__ = [
     "plan_prefill_chunk",
     "Graph",
     "trace",
+    "MeshSpec",
+    "propagate_divisors",
+    "sequence_parallel_in_specs",
+    "total_divisors",
+    "validate_mesh_axes",
     "eqn_flops",
     "graph_flops",
     "dim_stride",

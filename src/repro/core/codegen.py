@@ -131,6 +131,7 @@ def build_fn_from_plan(
     record: List = None,
     kernel_dispatch: bool = False,
     mask_mode: str = "auto",
+    mesh_spec=None,
 ):
     """Fast path: apply a saved :class:`~repro.core.plan.ChunkPlan` directly.
 
@@ -195,7 +196,7 @@ def build_fn_from_plan(
     fn = emit(g)
     try:
         gv, _ = trace(fn, flat_args, weight_argnums=weight_argnums)
-        prof = estimate_memory(gv)
+        prof = estimate_memory(gv, mesh_spec=mesh_spec)
     except Exception as e:
         raise PlanApplyError(f"verification re-trace failed: {e!r}") from e
     return fn, gv, prof

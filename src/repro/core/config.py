@@ -24,6 +24,7 @@ import json
 from dataclasses import asdict, dataclass, field
 from typing import Any, Dict, Optional, Sequence, Tuple
 
+from .meshspec import MeshSpec
 from .selection import CostHyper
 
 
@@ -70,6 +71,15 @@ class ChunkConfig:
                         (no (Sq,Skv) bool array), falling back to the
                         boolean-mask kernel for arbitrary masks; ``'bool'``
                         forces the boolean path (debug/benchmark)
+    ``mesh_spec``       :class:`~repro.core.meshspec.MeshSpec` describing
+                        the device mesh (axis names x sizes) and the flat
+                        per-invar partition specs.  When set, estimation /
+                        search / selection rank candidates by *per-device*
+                        bytes (sharded vars charge ``bytes/axis_size``),
+                        the compiled function jits under
+                        ``in_shardings``, and the spec serializes into the
+                        cache key — a plan searched for one mesh never
+                        replays onto another.  ``None`` = single device.
     ``canonical_bucket_exec``
                         compile ONE executable per shape bucket, at the
                         bucket's canonical (boundary) shape, and serve every
@@ -103,6 +113,7 @@ class ChunkConfig:
     kernel_dispatch: str = "auto"
     autotune: str = "auto"
     mask_mode: str = "auto"
+    mesh_spec: Optional[MeshSpec] = None
     canonical_bucket_exec: bool = False
     cache_max_entries: Optional[int] = None
     cache_policy: str = "lru"
@@ -145,6 +156,16 @@ class ChunkConfig:
             raise ValueError(
                 f"mask_mode must be 'auto' or 'bool', got {self.mask_mode!r}"
             )
+        if self.mesh_spec is not None:
+            if isinstance(self.mesh_spec, dict):
+                object.__setattr__(
+                    self, "mesh_spec", MeshSpec.from_dict(self.mesh_spec)
+                )
+            elif not isinstance(self.mesh_spec, MeshSpec):
+                raise ValueError(
+                    "mesh_spec must be a MeshSpec (or its to_dict form),"
+                    f" got {type(self.mesh_spec).__name__}"
+                )
         from .plan import PlanCache
 
         if self.cache_policy not in PlanCache.POLICIES:
@@ -212,6 +233,13 @@ class ChunkConfig:
             "kernel_dispatch": self.resolve_kernel_dispatch(),
             "autotune": self.resolve_autotune(),
             "mask_mode": self.mask_mode,
+            # the mesh is structural identity: per-device byte accounting
+            # changes search/selection results, so a plan searched for one
+            # mesh must MISS the cache key of every other (incl. no-mesh)
+            "mesh": (
+                self.mesh_spec.to_dict() if self.mesh_spec is not None
+                else None
+            ),
         }
 
     def resolve_kernel_dispatch(self) -> bool:
@@ -256,6 +284,11 @@ class ChunkConfig:
         # consumer at a different shape regime
         d.pop("cache_max_entries")
         d.pop("cache_policy")
+        # asdict recursed into the MeshSpec; replace with its canonical
+        # serialization (the same layout search_knobs hashes)
+        d["mesh_spec"] = (
+            self.mesh_spec.to_dict() if self.mesh_spec is not None else None
+        )
         return d
 
     @classmethod
@@ -267,7 +300,10 @@ class ChunkConfig:
         hyper = d.pop("hyper", None)
         if isinstance(hyper, dict):
             hyper = CostHyper(**hyper)
-        return cls(hyper=hyper or CostHyper(), **{
+        mesh = d.pop("mesh_spec", None)
+        if isinstance(mesh, dict):
+            mesh = MeshSpec.from_dict(mesh)
+        return cls(hyper=hyper or CostHyper(), mesh_spec=mesh, **{
             k: tuple(v) if isinstance(v, list) else v for k, v in d.items()
         })
 

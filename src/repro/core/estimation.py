@@ -27,17 +27,36 @@ from . import stats
 
 @dataclass
 class MemoryProfile:
-    """Result of the estimation pass."""
+    """Result of the estimation pass.
+
+    When the pass ran under a :class:`~repro.core.meshspec.MeshSpec`, all
+    byte figures are **per-device**: each var's bytes are divided by the
+    product of its propagated shard divisors, and ``shard_divisors`` maps
+    every var to that divisor so downstream passes (search featurization,
+    selection region terms) charge the same per-device bytes via
+    :meth:`nbytes`.  Without a mesh the figures are the single-device
+    totals and ``nbytes`` degenerates to :func:`atom_bytes`.
+    """
 
     per_eqn_bytes: List[int]          # live intermediate bytes during eqn i
     peak_bytes: int                   # max over eqns (intermediates only)
     peak_eqn: int                     # index of the peak equation
     io_bytes: int                     # inputs (non-weight) + outputs
     weight_bytes: int                 # parameter memory (excluded from peak)
+    shard_divisors: Optional[Dict[Var, int]] = None  # per-var byte divisor
 
     @property
     def total_peak_bytes(self) -> int:
         return self.peak_bytes + self.io_bytes
+
+    def nbytes(self, atom) -> int:
+        """Bytes of one atom at this profile's device granularity."""
+        b = atom_bytes(atom)
+        if self.shard_divisors and is_var(atom):
+            k = self.shard_divisors.get(atom, 1)
+            if k > 1:
+                return b // k
+        return b
 
 
 def _inner_jaxpr_peak(eqn) -> int:
@@ -100,9 +119,33 @@ def _jaxpr_peak(jaxpr) -> int:
     return peak
 
 
-def estimate_memory(g: Graph) -> MemoryProfile:
-    """Run the estimation pass over a :class:`Graph`."""
+def estimate_memory(g: Graph, *, mesh_spec=None) -> MemoryProfile:
+    """Run the estimation pass over a :class:`Graph`.
+
+    With ``mesh_spec`` (a :class:`~repro.core.meshspec.MeshSpec`) the pass
+    reports **per-device** live bytes: every var's bytes are divided by
+    the shard divisor propagated forward through the dimflow rules
+    (:func:`~repro.core.meshspec.total_divisors`) — a var sharded over a
+    mesh axis of size ``d`` charges ``bytes / d``, replicated vars charge
+    full bytes.  Loop bodies (``scan`` / ``while`` / ``chunk_loop``
+    ``body_peak``) charge full bytes either way: the chunk loop's regions
+    are exactly where sharding does not reach and chunking still pays.
+    """
     stats.bump("estimate_calls")
+    divisors: Optional[Dict[Var, int]] = None
+    if mesh_spec is not None:
+        from .meshspec import total_divisors
+
+        divisors = total_divisors(g, mesh_spec)
+
+    def nbytes(atom) -> int:
+        b = atom_bytes(atom)
+        if divisors is not None and is_var(atom):
+            k = divisors.get(atom, 1)
+            if k > 1:
+                return b // k
+        return b
+
     n = len(g.eqns)
     inputs = set(g.invars) | set(g.consts)
     per_eqn: List[int] = []
@@ -115,7 +158,7 @@ def estimate_memory(g: Graph) -> MemoryProfile:
         out_b = 0
         for ov in eqn.outvars:
             if isinstance(ov, Var) and ov not in inputs:
-                out_b += atom_bytes(ov)
+                out_b += nbytes(ov)
         cur = live_bytes + out_b + extra
         per_eqn.append(cur)
         if cur > peak:
@@ -129,17 +172,17 @@ def estimate_memory(g: Graph) -> MemoryProfile:
             ):
                 if ov not in live:
                     live.add(ov)
-                    live_bytes += atom_bytes(ov)
+                    live_bytes += nbytes(ov)
         # death
         dead = [v for v in live if g.last_use.get(v, -1) <= i]
         for v in dead:
             live.remove(v)
-            live_bytes -= atom_bytes(v)
+            live_bytes -= nbytes(v)
 
-    weight_b = sum(atom_bytes(v) for v in g.weight_invars)
+    weight_b = sum(nbytes(v) for v in g.weight_invars)
     io_b = (
-        sum(atom_bytes(v) for v in g.invars if v not in g.weight_invars)
-        + sum(atom_bytes(v) for v in g.outvars)
+        sum(nbytes(v) for v in g.invars if v not in g.weight_invars)
+        + sum(nbytes(v) for v in g.outvars)
     )
     return MemoryProfile(
         per_eqn_bytes=per_eqn,
@@ -147,6 +190,7 @@ def estimate_memory(g: Graph) -> MemoryProfile:
         peak_eqn=peak_eqn,
         io_bytes=io_b,
         weight_bytes=weight_b,
+        shard_divisors=divisors,
     )
 
 

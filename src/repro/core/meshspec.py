@@ -1,0 +1,463 @@
+"""Mesh-aware sharding for the compile pipeline: :class:`MeshSpec` and
+forward divisor propagation through the dimflow rules.
+
+AutoChunk's estimation pass models a single device, but production serving
+runs on a mesh: a var sharded over a mesh axis of size ``d`` only occupies
+``bytes / d`` per device, so plans searched against unsharded byte counts
+are wrong the moment tensor or data parallelism is involved (too
+conservative where sharding already divided the peak, too aggressive where
+it did not).  This module makes the mesh a first-class compile input:
+
+* :class:`MeshSpec` — a frozen, JSON-serializable description of the mesh
+  (ordered axis names x sizes) plus the per-flat-invar partition specs.
+  It hashes into :func:`~repro.core.plan.plan_cache_key` via
+  :meth:`~repro.core.config.ChunkConfig.search_knobs`, so a plan searched
+  for one mesh never replays onto another.
+* :func:`propagate_divisors` — the *forward* companion of the backward
+  chunk-flow rules in :mod:`repro.core.dimflow`.  The same per-primitive
+  dimension algebra that answers "which input dims must be sliced to chunk
+  this output dim" also answers "which input dims feed this output dim" —
+  so an output dim inherits an input dim's shard divisor exactly where the
+  rule maps one onto the other.  BREAKs and disagreements degrade to
+  divisor 1 (replicated: charge full bytes), which is conservative in the
+  right direction — chunking still pays exactly where sharding does not.
+
+Korthikanti et al. ("Reducing Activation Recomputation in Large
+Transformer Models") derive per-device activation cost as a function of
+the TP/SP degree; this module is that decomposition applied to the
+estimator, with :func:`sequence_parallel_in_specs` supplying their
+sequence-parallel unlock for the chunk loop's otherwise-replicated
+regions (shard the chunk axis over the mesh's data axis; GSPMD inserts
+the all-gathers at region boundaries).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from . import dimflow
+from .graph import Graph, Var, atom_bytes, is_var
+
+# One partition spec: per-dim mesh-axis name, tuple of names (a dim sharded
+# over several axes at once, e.g. batch over ("pod", "data")), or None for a
+# replicated dim.  A spec of None means the whole var is replicated.
+DimSpec = Any  # None | str | Tuple[str, ...]
+VarSpec = Optional[Tuple[DimSpec, ...]]
+
+
+def validate_mesh_axes(
+    axes: Sequence[Tuple[str, int]], n_devices: int
+) -> None:
+    """Raise a clear error when ``axes`` cannot tile ``n_devices`` devices.
+
+    ``jax.make_mesh`` surfaces an opaque reshape failure when the axis
+    sizes don't multiply out to the device count; this names the axes and
+    both counts instead (the ``launch/mesh.py`` builders and
+    :meth:`MeshSpec.build_mesh` share it).
+    """
+    names = [n for n, _ in axes]
+    if len(set(names)) != len(names):
+        raise ValueError(f"mesh axis names must be unique, got {names}")
+    for name, size in axes:
+        if not isinstance(size, int) or size < 1:
+            raise ValueError(
+                f"mesh axis {name!r} must have a positive int size,"
+                f" got {size!r}"
+            )
+    want = math.prod(s for _, s in axes)
+    if want != n_devices:
+        detail = " x ".join(f"{n}={s}" for n, s in axes)
+        raise ValueError(
+            f"mesh axes ({detail}) require {want} devices but"
+            f" {n_devices} are available; resize the axes so their product"
+            f" equals the device count (e.g. shrink the largest axis) or"
+            f" run with more devices"
+        )
+
+
+def _norm_dim(entry) -> DimSpec:
+    if entry is None:
+        return None
+    if isinstance(entry, str):
+        return entry
+    names = tuple(str(a) for a in entry)
+    if len(names) == 1:
+        return names[0]
+    return names
+
+
+def _dim_axes(entry) -> Tuple[str, ...]:
+    """The mesh-axis names one dim-spec entry shards over."""
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        return (entry,)
+    return tuple(entry)
+
+
+def _norm_spec(spec) -> VarSpec:
+    if spec is None:
+        return None
+    return tuple(_norm_dim(a) for a in spec)
+
+
+@dataclass(frozen=True)
+class MeshSpec:
+    """Serializable mesh description carried by :class:`ChunkConfig`.
+
+    ``axes``      ordered (name, size) pairs — the mesh shape
+    ``in_specs``  per flat traced invar: a per-dim tuple of mesh-axis
+                  names (``None`` entries = replicated dims), or ``None``
+                  for a fully replicated var.  Positions beyond the tuple
+                  are replicated.
+    ``out_specs`` same layout for the flat outputs (optional; execution
+                  hints only, never part of byte accounting)
+    ``seq_axis``  mesh axis used for Korthikanti-style sequence-parallel
+                  execution of unsharded chunk regions (see
+                  :func:`sequence_parallel_in_specs`); ``None`` disables
+    """
+
+    axes: Tuple[Tuple[str, int], ...]
+    in_specs: Tuple[VarSpec, ...] = ()
+    out_specs: Tuple[VarSpec, ...] = ()
+    seq_axis: Optional[str] = None
+
+    def __post_init__(self):
+        axes = tuple((str(n), int(s)) for n, s in self.axes)
+        if not axes:
+            raise ValueError("MeshSpec needs at least one axis")
+        names = [n for n, _ in axes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"mesh axis names must be unique, got {names}")
+        for n, s in axes:
+            if s < 1:
+                raise ValueError(f"mesh axis {n!r} size must be >= 1, got {s}")
+        object.__setattr__(self, "axes", axes)
+        object.__setattr__(
+            self, "in_specs", tuple(_norm_spec(s) for s in self.in_specs)
+        )
+        object.__setattr__(
+            self, "out_specs", tuple(_norm_spec(s) for s in self.out_specs)
+        )
+        known = set(names)
+        for where, specs in (("in_specs", self.in_specs),
+                             ("out_specs", self.out_specs)):
+            for spec in specs:
+                for entry in spec or ():
+                    for a in _dim_axes(entry):
+                        if a not in known:
+                            raise ValueError(
+                                f"{where} references unknown mesh axis"
+                                f" {a!r}; axes are {sorted(known)}"
+                            )
+        if self.seq_axis is not None and self.seq_axis not in known:
+            raise ValueError(
+                f"seq_axis {self.seq_axis!r} is not a mesh axis;"
+                f" axes are {sorted(known)}"
+            )
+
+    # -- basic queries ------------------------------------------------------
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.axes)
+
+    def axis_size(self, name: str) -> int:
+        for n, s in self.axes:
+            if n == name:
+                return s
+        raise KeyError(name)
+
+    @property
+    def n_devices(self) -> int:
+        return math.prod(s for _, s in self.axes)
+
+    def describe(self) -> str:
+        return ",".join(f"{n}={s}" for n, s in self.axes)
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def parse(cls, text: str, **kw) -> "MeshSpec":
+        """Build from the CLI spelling ``"data=2,model=4"``."""
+        axes = []
+        for part in text.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            if "=" not in part:
+                raise ValueError(
+                    f"mesh axis {part!r} must be name=size (e.g. data=2)"
+                )
+            name, size = part.split("=", 1)
+            axes.append((name.strip(), int(size)))
+        return cls(axes=tuple(axes), **kw)
+
+    # -- serialization (feeds the plan cache key) ---------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        def spec_doc(s: VarSpec):
+            if s is None:
+                return None
+            return [
+                e if (e is None or isinstance(e, str)) else list(e)
+                for e in s
+            ]
+
+        return {
+            "axes": [[n, s] for n, s in self.axes],
+            "in_specs": [spec_doc(s) for s in self.in_specs],
+            "out_specs": [spec_doc(s) for s in self.out_specs],
+            "seq_axis": self.seq_axis,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "MeshSpec":
+        return cls(
+            axes=tuple((n, int(s)) for n, s in d["axes"]),
+            in_specs=tuple(
+                None if s is None else tuple(s) for s in d.get("in_specs", ())
+            ),
+            out_specs=tuple(
+                None if s is None else tuple(s) for s in d.get("out_specs", ())
+            ),
+            seq_axis=d.get("seq_axis"),
+        )
+
+    # -- byte accounting ----------------------------------------------------
+    def dim_divisors(
+        self, spec: VarSpec, shape: Sequence[int]
+    ) -> Tuple[int, ...]:
+        """Per-dim shard divisor for a var of ``shape`` under ``spec``.
+
+        A dim only divides when its extent is divisible by the axis size —
+        GSPMD would pad otherwise, so per-device bytes would NOT shrink by
+        the full factor; charging full bytes keeps the estimate sound.
+        """
+        if spec is None:
+            return tuple(1 for _ in shape)
+        out = []
+        for d, ext in enumerate(shape):
+            entry = spec[d] if d < len(spec) else None
+            k = math.prod(self.axis_size(a) for a in _dim_axes(entry))
+            out.append(k if k > 1 and ext % k == 0 else 1)
+        return tuple(out)
+
+    # -- jax objects (lazy imports: spec math stays importable anywhere) ----
+    def build_mesh(self, devices=None):
+        """A ``jax.sharding.Mesh`` over these axes, with named validation.
+
+        Uses the first ``n_devices`` of the host's devices (a sub-mesh is
+        fine — a ``data=1`` spec must work on an 8-device host); raises
+        the axis-naming error when fewer devices exist than the axes need.
+        """
+        import numpy as _np
+        import jax
+        from jax.sharding import Mesh
+
+        devs = list(devices) if devices is not None else list(jax.devices())
+        if self.n_devices > len(devs):
+            validate_mesh_axes(self.axes, len(devs))
+        grid = _np.array(devs[: self.n_devices]).reshape(
+            [s for _, s in self.axes]
+        )
+        return Mesh(grid, self.axis_names)
+
+    def pspec(self, spec: VarSpec):
+        from jax.sharding import PartitionSpec
+
+        if spec is None:
+            return PartitionSpec()
+        return PartitionSpec(*spec)
+
+    def in_shardings(self, mesh, n_args: int) -> List[Any]:
+        """One ``NamedSharding`` per flat arg (replicated beyond in_specs)."""
+        from jax.sharding import NamedSharding
+
+        out = []
+        for i in range(n_args):
+            spec = self.in_specs[i] if i < len(self.in_specs) else None
+            out.append(NamedSharding(mesh, self.pspec(spec)))
+        return out
+
+
+# ===========================================================================
+# Forward divisor propagation (the dimflow rules, run forward)
+# ===========================================================================
+
+def _out_dim_divisor(eqn, out_idx, out_dim, ext, div) -> int:
+    """Shard divisor inherited by (output out_idx, dim out_dim).
+
+    Runs the backward chunk-flow rule forward: the rule's answer "chunking
+    this output dim needs input i sliced at dim m" means dim m of input i
+    *is* the data that becomes this output dim — so the output dim inherits
+    input i's divisor at m.  FULL inputs carry no constraint; a BREAK or a
+    divisor disagreement between mapped inputs degrades to 1 (replicated).
+    """
+    mapping = dimflow.propagate(eqn, out_idx, out_dim)
+    if mapping is None:
+        return 1
+    seen = set()
+    for ii, md in mapping.items():
+        if md == dimflow.FULL:
+            continue
+        iv = eqn.invars[ii]
+        if not is_var(iv):
+            continue
+        dv = div.get(iv)
+        if dv is None or md >= len(dv):
+            return 1  # unknown provenance: charge full bytes
+        seen.add(dv[md])
+    # replicated operands (divisor 1, e.g. a broadcast mask) don't veto a
+    # sharded one — GSPMD's propagation keeps the output sharded there.
+    # Two *distinct* shardings feeding one dim is a genuine conflict: the
+    # compiler must reshard, so charge full bytes.
+    nonunit = seen - {1}
+    if len(nonunit) != 1:
+        return 1
+    k = nonunit.pop()
+    return k if ext % k == 0 else 1
+
+
+def propagate_divisors(
+    g: Graph, mesh_spec: MeshSpec
+) -> Dict[Var, Tuple[int, ...]]:
+    """Per-dim shard divisors for every var in ``g``.
+
+    Seeded from ``mesh_spec.in_specs`` (positional over ``g.invars``;
+    consts and unspecified invars are replicated), then propagated forward
+    through every equation via the dimflow rules.  Loop primitives
+    (``scan`` / ``while`` / ``chunk_loop``) have no dimflow rule, so their
+    outputs — and everything inside their bodies — charge full bytes: the
+    chunk loop's regions are exactly the "unsharded region" of the
+    Korthikanti decomposition, where chunking (or sequence parallelism,
+    see :func:`sequence_parallel_in_specs`) still pays.
+    """
+    div: Dict[Var, Tuple[int, ...]] = {}
+    for i, v in enumerate(g.invars):
+        spec = (
+            mesh_spec.in_specs[i] if i < len(mesh_spec.in_specs) else None
+        )
+        shape = getattr(v.aval, "shape", ())
+        div[v] = mesh_spec.dim_divisors(spec, shape)
+    for v in g.consts:
+        div[v] = tuple(1 for _ in getattr(v.aval, "shape", ()))
+    for eqn in g.eqns:
+        for oi, ov in enumerate(eqn.outvars):
+            if not is_var(ov):
+                continue
+            shape = getattr(ov.aval, "shape", ())
+            div[ov] = tuple(
+                _out_dim_divisor(eqn, oi, d, shape[d], div)
+                for d in range(len(shape))
+            )
+    # One backward refinement sweep: a var the forward pass left
+    # replicated on a dim (e.g. a causal mask broadcast from an iota
+    # comparison — its batch dim is broadcast-born, so it has no input
+    # provenance) is upgraded to the divisor of a consumer that shards
+    # that dim.  That is GSPMD's own backward sharding propagation: the
+    # producer only materializes its shard of the broadcast.  Seeded
+    # invars are never upgraded — their placement is declared, not
+    # inferred.
+    seeded = set(g.invars)
+    for eqn in reversed(g.eqns):
+        for oi, ov in enumerate(eqn.outvars):
+            if not is_var(ov):
+                continue
+            ovd = div.get(ov)
+            if not ovd or all(k <= 1 for k in ovd):
+                continue
+            oshape = getattr(ov.aval, "shape", ())
+            for od, k in enumerate(ovd):
+                if k <= 1:
+                    continue
+                mapping = dimflow.propagate(eqn, oi, od)
+                if not mapping:
+                    continue
+                for ii, md in mapping.items():
+                    if md == dimflow.FULL:
+                        continue
+                    iv = eqn.invars[ii]
+                    if not is_var(iv) or iv in seeded:
+                        continue
+                    dv = div.get(iv)
+                    if dv is None or md >= len(dv) or dv[md] != 1:
+                        continue
+                    ext = getattr(iv.aval, "shape", ())[md]
+                    if ext == oshape[od] and ext % k == 0:
+                        row = list(dv)
+                        row[md] = k
+                        div[iv] = tuple(row)
+    return div
+
+
+def total_divisors(
+    g: Graph, mesh_spec: MeshSpec
+) -> Dict[Var, int]:
+    """Collapse :func:`propagate_divisors` to one per-var byte divisor."""
+    return {
+        v: math.prod(dims) if dims else 1
+        for v, dims in propagate_divisors(g, mesh_spec).items()
+    }
+
+
+def sharded_bytes(atom, divisors: Dict[Var, int]) -> int:
+    """Per-device bytes of one atom under a divisor map."""
+    b = atom_bytes(atom)
+    if is_var(atom):
+        k = divisors.get(atom, 1)
+        if k > 1:
+            return b // k
+    return b
+
+
+# ===========================================================================
+# Sequence-parallel execution specs (Korthikanti-style)
+# ===========================================================================
+
+def sequence_parallel_in_specs(
+    g: Graph, mesh_spec: MeshSpec
+) -> Tuple[VarSpec, ...]:
+    """In-specs that shard the chunk axis of a rewritten graph's loops.
+
+    For every ``chunk_loop`` node in ``g``, the graph invars feeding its
+    sliced inputs get ``mesh_spec.seq_axis`` on their chunk dim (when the
+    extent divides the axis size and the var is not already sharded).
+    Compiling under these shardings makes GSPMD execute each device's
+    slice of the chunk axis locally and insert the all-gathers at the
+    region boundaries — the sequence-parallel treatment of exactly the
+    regions tensor parallelism leaves replicated.  Returns a full in-spec
+    tuple (existing ``mesh_spec.in_specs`` entries win; only replicated
+    dims are upgraded).
+    """
+    if mesh_spec.seq_axis is None:
+        return mesh_spec.in_specs
+    k = mesh_spec.axis_size(mesh_spec.seq_axis)
+    if k <= 1:
+        return mesh_spec.in_specs
+    invar_pos = {v: i for i, v in enumerate(g.invars)}
+    specs: List[List[DimSpec]] = []
+    for i, v in enumerate(g.invars):
+        base = (
+            mesh_spec.in_specs[i] if i < len(mesh_spec.in_specs) else None
+        )
+        shape = getattr(v.aval, "shape", ())
+        row = list(base) if base is not None else []
+        row += [None] * (len(shape) - len(row))
+        specs.append(row)
+    for eqn in g.eqns:
+        if eqn.primitive.name != "chunk_loop":
+            continue
+        for iv, d in eqn.params["sliced"]:
+            pos = invar_pos.get(iv)
+            if pos is None:
+                continue
+            shape = getattr(iv.aval, "shape", ())
+            if d >= len(shape) or shape[d] % k != 0:
+                continue
+            row = specs[pos]
+            if any(a is not None for a in row):
+                continue  # already sharded (TP/FSDP wins)
+            row[d] = mesh_spec.seq_axis
+    return tuple(
+        tuple(row) if any(a is not None for a in row) else None
+        for row in specs
+    )

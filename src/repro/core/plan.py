@@ -56,7 +56,13 @@ from .search import ChunkCandidate
 # sizes, DMA buffer depth, paged pages-per-step) chosen on the cold compile,
 # and search knobs gained ``autotune`` + ``mask_mode``; v3 plans predate the
 # tuning pass and are rejected so a recompile can pick up kernel tuning.
-PLAN_FORMAT_VERSION = 4
+# v5: plans record the device mesh they were searched for (``mesh`` field —
+# the serialized MeshSpec, or None for single-device) and search knobs
+# gained ``mesh``: estimation/search/selection now rank candidates by
+# *per-device* bytes under the mesh's partition specs, so a v4 plan's
+# stage choices are only valid for the unsharded byte model and are
+# rejected so a recompile can re-rank under the mesh-aware estimator.
+PLAN_FORMAT_VERSION = 5
 
 
 class PlanApplyError(RuntimeError):
@@ -206,6 +212,10 @@ class ChunkPlan:
     # serialized KernelTuning (kernels.autotune) chosen at cold compile;
     # None when the plan was built with autotune off
     tuning: Optional[Dict[str, Any]] = None
+    # serialized MeshSpec the plan was searched for (None = single device);
+    # the mesh is already part of cache_key via search_knobs, so this is
+    # introspection + a hard guard for callers loading plans by path
+    mesh: Optional[Dict[str, Any]] = None
     version: int = PLAN_FORMAT_VERSION
 
     # -- JSON round-trip ----------------------------------------------------
@@ -224,8 +234,9 @@ class ChunkPlan:
             raise PlanApplyError(
                 f"plan format v{d.get('version', 1)} does not match"
                 f" supported v{PLAN_FORMAT_VERSION}; recompile to pick up"
-                " kernel tuning (v4 plans persist the autotuned"
-                " KernelTuning; earlier versions predate it)"
+                " mesh-aware planning (v5 plans record the device mesh and"
+                " were ranked by per-device sharded bytes; earlier versions"
+                " used the single-device byte model)"
             )
         stages = [
             PlanStage(
@@ -244,6 +255,7 @@ class ChunkPlan:
             stages=stages,
             meta=dict(d.get("meta", {})),
             tuning=dict(d["tuning"]) if d.get("tuning") else None,
+            mesh=dict(d["mesh"]) if d.get("mesh") else None,
             version=int(d.get("version", 1)),
         )
 

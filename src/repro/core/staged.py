@@ -258,7 +258,7 @@ def _search_loop(
         for cand, n, est, cost in ranked[: config.beam]:
             try:
                 g2 = apply_chunk(g, cand, n, validate=False)
-                prof2 = estimate_memory(g2)
+                prof2 = estimate_memory(g2, mesh_spec=config.mesh_spec)
             except Exception:
                 continue
             big_gain = prof2.peak_bytes < prof.peak_bytes * (1.0 - config.min_gain)
@@ -356,7 +356,9 @@ class Traced:
                 flat_fn, self.flat_args, weight_argnums=self.weight_flat
             )
         with span("compile.estimate"):
-            self.profile: MemoryProfile = estimate_memory(self.graph)
+            self.profile: MemoryProfile = estimate_memory(
+                self.graph, mesh_spec=config.mesh_spec
+            )
         self.baseline_peak: int = self.profile.peak_bytes
         self.budget_bytes: int = config.resolve_budget(self.baseline_peak)
 
@@ -458,21 +460,39 @@ class Traced:
                 g, _ = trace(
                     cur, self.flat_args, weight_argnums=self.weight_flat
                 )
-                prof = estimate_memory(g)
+                prof = estimate_memory(g, mesh_spec=config.mesh_spec)
         else:  # nothing chunked: the baseline graph is the program
             cur, g, prof = self.flat_fn, self.graph, self.profile
+        meta = {
+            "io_bytes": prof.io_bytes,
+            "weight_bytes": prof.weight_bytes,
+            "compile_s": round(time.perf_counter() - self._t0, 3),
+        }
+        if config.mesh_spec is not None:
+            stats.bump("sharded_plans")
+            if config.mesh_spec.seq_axis is not None and pstages:
+                # sequence-parallel execution specs for the chunk regions,
+                # computed against the rewritten graph (the only place the
+                # chunk_loop nodes are visible) and persisted so warm
+                # replays — which skip the rewritten form — reuse them
+                from .meshspec import sequence_parallel_in_specs
+
+                specs = sequence_parallel_in_specs(lowered, config.mesh_spec)
+                meta["exec_in_specs"] = [
+                    None if s is None else list(s) for s in specs
+                ]
         plan = ChunkPlan(
             cache_key=ckey,
             budget_bytes=self.budget_bytes,
             baseline_peak=self.baseline_peak,
             final_peak=prof.peak_bytes,
             stages=pstages,
-            meta={
-                "io_bytes": prof.io_bytes,
-                "weight_bytes": prof.weight_bytes,
-                "compile_s": round(time.perf_counter() - self._t0, 3),
-            },
+            meta=meta,
             tuning=tuning.to_dict() if tuning is not None else None,
+            mesh=(
+                config.mesh_spec.to_dict()
+                if config.mesh_spec is not None else None
+            ),
         )
         if cache is not None:
             cache.put(ckey, plan)
@@ -506,6 +526,7 @@ class Traced:
                     record=rec,
                     kernel_dispatch=self.cf.config.resolve_kernel_dispatch(),
                     mask_mode=self.cf.config.mask_mode,
+                    mesh_spec=self.cf.config.mesh_spec,
                 )
         except PlanApplyError:
             stats.bump("plan_replay_failures")
@@ -526,7 +547,10 @@ class Traced:
             # per-stage peaks at *this* shape: each recorded graph is the
             # state the stage was applied on, the next graph (or the final
             # profile) is the state after it
-            peaks = [estimate_memory(gi).peak_bytes for gi, _, _ in rec]
+            peaks = [
+                estimate_memory(gi, mesh_spec=self.cf.config.mesh_spec).peak_bytes
+                for gi, _, _ in rec
+            ]
             peaks.append(prof.peak_bytes)
             pstages = [
                 PlanStage.from_candidate(
@@ -545,9 +569,12 @@ class Traced:
                 stages=pstages,
                 meta=meta,
                 tuning=saved.tuning,  # bucket hits inherit the home tuning
+                mesh=saved.mesh,
             )
         else:
             plan = saved
+        if self.cf.config.mesh_spec is not None:
+            stats.bump("sharded_plans")
         records = [
             StageRecord(
                 stage=i,
@@ -654,7 +681,13 @@ class Planned:
         )
         result.accuracy = self.plan_accuracy()
         obs_accuracy.publish(result.accuracy)
-        return CompiledFunction(result, bucket_hit=self.bucket_hit)
+        return CompiledFunction(
+            result,
+            bucket_hit=self.bucket_hit,
+            mesh_spec=t.cf.config.mesh_spec,
+            exec_in_specs=self.plan.meta.get("exec_in_specs"),
+            in_tree=t.in_tree,
+        )
 
     def plan_accuracy(self) -> obs_accuracy.PlanAccuracy:
         """Predicted-vs-measured activation peak for this plan.
@@ -673,6 +706,23 @@ class Planned:
             if self.plan.stages else self.plan.baseline_peak
         )
         closed = getattr(self.graph, "closed_jaxpr", None)
+        mesh_spec = self.traced.cf.config.mesh_spec
+        if mesh_spec is not None and closed is not None:
+            # Per-device accuracy: the profile's sharded peak vs the full
+            # watermark scaled down by the same estimation-derived factor.
+            # The divisor is computed here (two estimation runs on the same
+            # emitted graph) so obs stays importable without repro.core.
+            full_peak = estimate_memory(self.graph).peak_bytes
+            divisor = (
+                full_peak / self.profile.peak_bytes
+                if self.profile.peak_bytes > 0 else 1.0
+            )
+            return obs_accuracy.per_device_accuracy(
+                predicted, closed,
+                peak_divisor=max(divisor, 1.0),
+                cache_key=self.plan.cache_key,
+                final_peak_estimate=self.profile.peak_bytes,
+            )
         if closed is not None:
             measured = obs_accuracy.watermark_jaxpr(closed)
         else:
@@ -691,11 +741,22 @@ class CompiledFunction:
     with ``jax.jit``/``shard_map``/``grad`` yourself when preferred).
     """
 
-    def __init__(self, result: AutoChunkResult, *, bucket_hit: bool = False):
+    def __init__(
+        self,
+        result: AutoChunkResult,
+        *,
+        bucket_hit: bool = False,
+        mesh_spec=None,
+        exec_in_specs=None,
+        in_tree=None,
+    ):
         self.result = result
         self.fn = result.fn
         self.bucket_hit = bucket_hit
         self.autochunk_result = result  # legacy attribute location
+        self.mesh_spec = mesh_spec
+        self.exec_in_specs = exec_in_specs
+        self._in_tree = in_tree
         self._jitted: Optional[Callable] = None
 
     @property
@@ -724,9 +785,41 @@ class CompiledFunction:
         except AttributeError:  # older/newer jax without the private probe
             return None
 
+    def _in_shardings(self):
+        """Arg-tree of ``NamedSharding``s when a mesh is configured.
+
+        Uses the plan's persisted sequence-parallel ``exec_in_specs`` when
+        present (they subsume the user ``in_specs``); otherwise falls back
+        to the mesh's declared input specs.  Returns ``None`` (plain jit)
+        without a mesh or when the mesh cannot be built on this host.
+        """
+        if self.mesh_spec is None or self._in_tree is None:
+            return None
+        from jax.sharding import NamedSharding
+
+        mesh = self.mesh_spec.build_mesh()
+        n = self._in_tree.num_leaves
+        specs = self.exec_in_specs
+        if specs is None:
+            specs = self.mesh_spec.in_specs
+        leaves = []
+        for i in range(n):
+            spec = specs[i] if i < len(specs) else None
+            if spec is not None:
+                spec = tuple(
+                    e if (e is None or isinstance(e, str)) else tuple(e)
+                    for e in spec
+                )
+            leaves.append(NamedSharding(mesh, self.mesh_spec.pspec(spec)))
+        return tree_util.tree_unflatten(self._in_tree, leaves)
+
     def __call__(self, *args):
         if self._jitted is None:
-            self._jitted = jax.jit(self.fn)
+            shardings = self._in_shardings()
+            if shardings is not None:
+                self._jitted = jax.jit(self.fn, in_shardings=shardings)
+            else:
+                self._jitted = jax.jit(self.fn)
         return self._jitted(*args)
 
 

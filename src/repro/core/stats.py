@@ -109,6 +109,10 @@ _PIPELINE_COUNTERS = (
     "cow_copies",
     "pages_spilled",
     "pages_restored",
+    # mesh-aware planning (core.meshspec): plans searched or replayed under
+    # a configured MeshSpec — i.e. ranked by per-device sharded bytes rather
+    # than the single-device model (asserted >0 by CI's multi-device leg)
+    "sharded_plans",
 )
 
 for _name in _PIPELINE_COUNTERS:

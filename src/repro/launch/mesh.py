@@ -15,9 +15,17 @@ ICI_BW = 50e9                 # bytes/s per link
 
 
 def make_production_mesh(*, multi_pod: bool = False):
-    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+
+    Axis sizes are validated against the visible device count before the
+    mesh is built, so a mismatch raises an error naming the axes instead
+    of ``jax.make_mesh``'s opaque reshape failure.
+    """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    from ..core.meshspec import validate_mesh_axes
+
+    validate_mesh_axes(tuple(zip(axes, shape)), len(jax.devices()))
     return jax.make_mesh(shape, axes)
 
 

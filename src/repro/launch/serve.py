@@ -59,6 +59,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import time
 
 import jax
@@ -101,6 +102,32 @@ def write_obs_outputs(args, engine) -> None:
         print(f"[serve] chrome trace ({n_spans} spans) -> {args.trace_out}")
 
 
+def print_mesh_line(engine) -> None:
+    """The ``[serve] mesh:`` counter line CI's multi-device leg greps.
+
+    ``sharded_plans`` proves plans were searched/replayed under the mesh;
+    ``per_device_error_pct`` is the per-device plan-accuracy error (nan
+    when the engine has no per-device accuracy record, e.g. the paged
+    engine's unsharded prefill planner).
+    """
+    if getattr(engine, "mesh_spec", None) is None:
+        return
+    m = engine.metrics()["mesh"]
+    acc = engine.plan_accuracy()
+    err = "nan"
+    if acc is not None and (
+        acc.source == "per_device_watermark" or "peak_divisor" in acc.extra
+    ) and math.isfinite(acc.error_pct):
+        err = f"{acc.error_pct:.2f}"
+    print(
+        "[serve] mesh:"
+        f" axes={m['axes']}"
+        f" n_devices={m['n_devices']}"
+        f" sharded_plans={m['sharded_plans']}"
+        f" per_device_error_pct={err}"
+    )
+
+
 def serve_paged(cfg, params, rng, args):
     """Drive the paged continuous-batching engine (``--paged``)."""
     chunk = (
@@ -117,6 +144,7 @@ def serve_paged(cfg, params, rng, args):
         prefix_cache=args.prefix_cache, spill_pages=args.spill_pages,
         greedy=not args.sample, seed=args.seed,
         obs=not args.no_obs,
+        mesh=args.mesh_spec,
     )
     plan = engine.prefill_plan
     plan_note = (
@@ -211,6 +239,7 @@ def serve_paged(cfg, params, rng, args):
             f" spilled_nodes={pc['spilled_nodes']}"
         )
     print(f"[serve] kv pool: {m['kv_pool']}")
+    print_mesh_line(engine)
     write_obs_outputs(args, engine)
     for r in done[:3]:
         print(f"  req {r.rid}: {r.generated[:8]}...")
@@ -296,9 +325,25 @@ def main(argv=None):
                          " scenario (sequential drain; every 3rd request is"
                          " a one-off un-cached pressure filler) — the CI"
                          " prefix smoke")
+    ap.add_argument("--mesh", type=str, default=None,
+                    help="serve sharded on a device mesh, e.g."
+                         " 'data=2,model=4' (axis sizes must multiply out"
+                         " to the visible device count); plans are searched"
+                         " by per-device sharded bytes and the decode wave"
+                         " jits under in_shardings")
+    ap.add_argument("--seq-axis", type=str, default=None,
+                    help="mesh axis for sequence-parallel execution of"
+                         " unsharded chunk regions (requires --mesh)")
     args = ap.parse_args(argv)
     if args.no_obs:
         TRACER.enabled = False
+    if args.seq_axis and not args.mesh:
+        ap.error("--seq-axis requires --mesh")
+    args.mesh_spec = None
+    if args.mesh:
+        from ..core.meshspec import MeshSpec
+
+        args.mesh_spec = MeshSpec.parse(args.mesh, seq_axis=args.seq_axis)
 
     cfg = get_config(args.arch)
     if args.local:
@@ -328,6 +373,7 @@ def main(argv=None):
         greedy=not args.sample,
         seed=args.seed,
         obs=not args.no_obs,
+        mesh=args.mesh_spec,
     )
     t_build = time.perf_counter() - t_build0
     if args.autochunk is not None:
@@ -405,6 +451,7 @@ def main(argv=None):
         f" kernel_dispatch_hits={snap['kernel_dispatch_hits']}"
         f" kernel_dispatch_misses={snap['kernel_dispatch_misses']}"
     )
+    print_mesh_line(engine)
     write_obs_outputs(args, engine)
     for r in done[:3]:
         print(f"  req {r.rid}: {r.generated[:8]}...")

@@ -189,6 +189,29 @@ def cache_pspecs(cfg, cache_tree, mesh, *, seq_shard: bool = False):
     return jax.tree_util.tree_map_with_path(spec_for, cache_tree)
 
 
+def pspec_entries(pspec) -> Optional[Tuple]:
+    """One ``MeshSpec`` var-spec from a ``PartitionSpec``.
+
+    ``None`` means fully replicated; otherwise a per-dim tuple of axis
+    name / tuple-of-names / ``None`` entries — the serializable spelling
+    ``repro.core.meshspec.MeshSpec`` carries into the plan cache key.
+    """
+    entries = tuple(
+        None if e is None else (e if isinstance(e, str) else tuple(e))
+        for e in tuple(pspec)
+    )
+    return entries if any(e is not None for e in entries) else None
+
+
+def mesh_spec_entries(pspec_tree) -> Tuple:
+    """Flat per-leaf ``MeshSpec.in_specs`` rows from a PartitionSpec pytree
+    (tree-flatten order, matching the compile pipeline's flat invars)."""
+    leaves = jax.tree_util.tree_leaves(
+        pspec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+    return tuple(pspec_entries(s) for s in leaves)
+
+
 def to_shardings(mesh, pspec_tree):
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), pspec_tree,

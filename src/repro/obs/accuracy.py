@@ -20,6 +20,11 @@ Two measurement sources:
   *emitted* program with its real ``scan`` bodies — so the error is the
   estimator's structural drift, not a tautology.
 
+Under a device mesh a third source, ``per_device_watermark``
+(:func:`per_device_accuracy`), scales the interpret watermark down to one
+device's shard so mesh-aware (per-device) predictions compare against a
+per-device measurement.
+
 ``watermark_jaxpr`` deliberately re-implements the SSA liveness walk from
 ``core.estimation`` instead of importing it: ``repro.obs`` must stay
 importable without ``repro.core`` (core.stats imports obs.metrics), and
@@ -200,6 +205,45 @@ def compare(predicted_bytes: int, measured_bytes: int, source: str,
     else:
         err = math.inf
     return PlanAccuracy(p, m, err, source, cache_key, dict(extra))
+
+
+def per_device_accuracy(
+    predicted_bytes: int,
+    closed_jaxpr,
+    *,
+    peak_divisor: float = 1.0,
+    cache_key: str = "",
+    exclude_nbytes=(),
+    device=None,
+    **extra,
+) -> PlanAccuracy:
+    """Predicted-vs-measured peak at *per-device* granularity.
+
+    When the compile pipeline plans against a mesh, its prediction is the
+    sharded (per-device) peak.  The emitted jaxpr, however, is the global
+    program — its :func:`watermark_jaxpr` is the full unsharded watermark.
+    ``peak_divisor`` is the caller-computed ratio between the full and the
+    per-device estimate of the *same* emitted graph (two estimation runs in
+    ``repro.core``; this module stays importable without it), so the
+    partitioned measurement is ``watermark / peak_divisor`` — the same
+    structural watermark, charged at the device's shard of every var.
+    Where the backend exposes allocator stats, the current per-device
+    ``peak_bytes_in_use`` rides along in ``extra`` for the serving layer.
+    """
+    full = watermark_jaxpr(closed_jaxpr, exclude_nbytes=exclude_nbytes)
+    div = float(peak_divisor) if peak_divisor and peak_divisor > 0 else 1.0
+    measured = int(full / div)
+    acc = compare(
+        predicted_bytes, measured, "per_device_watermark",
+        cache_key=cache_key,
+        full_watermark_bytes=full,
+        peak_divisor=div,
+        **extra,
+    )
+    dev_peak = device_peak_bytes(device)
+    if dev_peak is not None:
+        acc.extra["device_peak_bytes_in_use"] = int(dev_peak)
+    return acc
 
 
 def with_device_measurement(

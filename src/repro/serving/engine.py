@@ -52,6 +52,51 @@ from ..obs import metrics as obs_metrics
 from ..obs.tracing import span as _span
 
 
+# ---------------------------------------------------------------------------
+# Device-mesh plumbing (shared by both engines)
+# ---------------------------------------------------------------------------
+
+def _normalize_mesh(mesh):
+    """``(MeshSpec, jax.Mesh)`` from a MeshSpec, a jax Mesh, or the CLI
+    spelling ``"data=2,model=4"``.  ``(None, None)`` when no mesh."""
+    if mesh is None:
+        return None, None
+    from ..core.meshspec import MeshSpec
+
+    if isinstance(mesh, MeshSpec):
+        return mesh, mesh.build_mesh()
+    if isinstance(mesh, str):
+        spec = MeshSpec.parse(mesh)
+        return spec, spec.build_mesh()
+    # a live jax Mesh: derive the serializable spec from its axes
+    spec = MeshSpec(
+        axes=tuple((str(n), int(mesh.shape[n])) for n in mesh.axis_names)
+    )
+    return spec, mesh
+
+
+def _shard_params(cfg, params, mesh):
+    """Place params onto ``mesh``: tensor-parallel via the launch-layer
+    rules when the mesh has the ``data``/``model`` axes they name,
+    replicated otherwise (computation follows data under GSPMD)."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    names = set(mesh.axis_names)
+    if "model" in names and "data" in names:
+        from ..launch.sharding import param_pspecs, to_shardings
+
+        shardings = to_shardings(mesh, param_pspecs(cfg, params, mesh))
+        return jax.device_put(params, shardings)
+    rep = NamedSharding(mesh, PartitionSpec())
+    return jax.tree.map(lambda x: jax.device_put(x, rep), params)
+
+
+def _dp_axis(mesh_spec) -> str:
+    """The mesh axis a wave's slot/batch dim shards over."""
+    names = mesh_spec.axis_names
+    return "data" if "data" in names else names[0]
+
+
 @dataclass
 class Request:
     rid: int
@@ -152,12 +197,21 @@ class ServeEngine:
         greedy: bool = True,
         seed: int = 0,
         obs: bool = True,
+        mesh=None,
     ):
         from ..core import ShapeBucketer
         from ..core.plan import PlanCache, as_plan_cache
 
         self.cfg = cfg
-        self.params = params
+        # mesh: a MeshSpec, a jax Mesh, or "data=2,model=4".  Params are
+        # placed onto the mesh (TP when its axes match the launch rules),
+        # the decode wave jits under DP in_shardings over the slot dim,
+        # and the compile pipeline plans by per-device sharded bytes.
+        self.mesh_spec, self.mesh = _normalize_mesh(mesh)
+        self.params = (
+            _shard_params(cfg, params, self.mesh)
+            if self.mesh is not None else params
+        )
         self._obs = _EngineObs(obs)
         # allocator baseline for the device-side accuracy measurement
         # (None on backends without memory_stats, e.g. CPU)
@@ -272,6 +326,21 @@ class ServeEngine:
             return logits[0, 0], nc
 
         decode_wave = jax.vmap(_row_decode)
+        wave_mesh_spec = None
+        if self.mesh_spec is not None:
+            # DP over the slot dim of every wave input (cache leaves, toks,
+            # pos).  Entries are axis *names*, not shapes — estimation
+            # checks divisibility per concrete shape — so one spec covers
+            # every reconfigure of this engine.
+            from ..core.meshspec import MeshSpec
+
+            dp = _dp_axis(self.mesh_spec)
+            n_leaves = len(jax.tree_util.tree_leaves(self.cache)) + 2
+            wave_mesh_spec = MeshSpec(
+                axes=self.mesh_spec.axes,
+                in_specs=tuple((dp,) for _ in range(n_leaves)),
+                seq_axis=self.mesh_spec.seq_axis,
+            )
         if self.autochunk_budget is not None:
             from ..core import ChunkConfig, ChunkedFunction
 
@@ -287,6 +356,7 @@ class ServeEngine:
                         canonical_bucket_exec=self.canonical_bucket_exec,
                         cache_policy=self.cache_policy,
                         cache_max_entries=self.cache_max_entries,
+                        mesh_spec=wave_mesh_spec,
                     ),
                     cache=self.plan_cache,
                     bucketer=self.bucketer,
@@ -309,7 +379,22 @@ class ServeEngine:
                     and self.plan_cache is not None):
                 self.plan_cache.record_accuracy(res.cache_key, res.accuracy)
             decode_wave = compiled.fn
-        self._decode_wave = jax.jit(decode_wave)
+        if self.mesh is not None:
+            # DP-shard the wave over the mesh: every input's slot dim lands
+            # on the data axis, params stay at their device_put shardings
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            dp_sh = NamedSharding(
+                self.mesh, PartitionSpec(_dp_axis(self.mesh_spec))
+            )
+            self._decode_wave = jax.jit(
+                decode_wave,
+                in_shardings=(
+                    jax.tree.map(lambda _: dp_sh, self.cache), dp_sh, dp_sh
+                ),
+            )
+        else:
+            self._decode_wave = jax.jit(decode_wave)
         self._prefill = jax.jit(
             lambda batch: M.prefill(self.cfg, self.params, batch, self.exec_len)
         )
@@ -494,6 +579,12 @@ class ServeEngine:
         }
         out["exec_len"] = self.exec_len
         out["bucket_exec"] = dict(self.exec_stats)
+        if self.mesh_spec is not None:
+            out["mesh"] = {
+                "axes": self.mesh_spec.describe(),
+                "n_devices": self.mesh_spec.n_devices,
+                "sharded_plans": stats.snapshot().get("sharded_plans", 0),
+            }
         if self.plan_cache is not None:
             out["plan_cache"] = self.plan_cache.stats()
             if self.autochunk_result is not None and self.autochunk_result.cache_key:
@@ -605,6 +696,7 @@ class PagedServeEngine:
         greedy: bool = True,
         seed: int = 0,
         obs: bool = True,
+        mesh=None,
     ):
         from ..core.estimation import plan_prefill_chunk
         from .kv_pool import KVPool
@@ -619,7 +711,16 @@ class PagedServeEngine:
             raise ValueError("paged serving keeps the full context; use the"
                              " slot engine for sliding-window archs")
         self.cfg = cfg
-        self.params = params
+        # mesh placement mirrors ServeEngine: params go tensor-parallel
+        # when the mesh has the launch-rule axes, replicated otherwise.
+        # Prefill *planning* stays deliberately unsharded/conservative —
+        # the pool's pages are engine state, not activations.
+        self.mesh_spec, self.mesh = _normalize_mesh(mesh)
+        self.params = (
+            _shard_params(cfg, params, self.mesh)
+            if self.mesh is not None else params
+        )
+        params = self.params
         self.max_seqs = max_seqs
         self.max_len = max_len
         self.page_size = page_size
@@ -1028,6 +1129,12 @@ class PagedServeEngine:
             "scheduler": dict(self.sched_stats),
             "kv_pool": self.pool.stats(),
         }
+        if self.mesh_spec is not None:
+            out["mesh"] = {
+                "axes": self.mesh_spec.describe(),
+                "n_devices": self.mesh_spec.n_devices,
+                "sharded_plans": stats.snapshot().get("sharded_plans", 0),
+            }
         if self.prefix_cache is not None:
             out["prefix_cache"] = self.prefix_cache.stats()
         if self.prefill_plan is not None:

@@ -123,7 +123,7 @@ def test_config_search_knobs_matches_legacy_layout():
     assert set(knobs) == {
         "max_stages", "beam", "window", "min_gain", "allow_hoist",
         "dim_blocklist", "anneal", "kernel_dispatch", "autotune",
-        "mask_mode",
+        "mask_mode", "mesh",
     }
     assert knobs["dim_blocklist"] == [2, 4]
     # the *resolved* dispatch/autotune decisions feed the key, so
